@@ -1,0 +1,56 @@
+"""Kernel micro-benchmarks: XLA reference path wall-times on this CPU
+(relative scaling only — Pallas kernels target TPU and are validated in
+interpret mode, not timed here)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+
+def _time(fn, *args, repeats=5, **kw):
+    fn(*args, **kw)[0].block_until_ready() if isinstance(
+        fn(*args, **kw), tuple) else fn(*args, **kw).block_until_ready()
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        jax.tree.map(
+            lambda x: x.block_until_ready() if hasattr(
+                x, "block_until_ready") else x, out)
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def bench() -> list[dict]:
+    rng = np.random.default_rng(0)
+    rows = []
+
+    segs = jnp.asarray(np.sort(rng.integers(0, 4096, 65536)), jnp.int32)
+    vals = jnp.asarray(rng.normal(size=(65536, 64)), jnp.float32)
+    f = jax.jit(lambda v, s: ops.segment_reduce(v, s, 4096, "sum"))
+    rows.append({"table": "kernels", "name": "segment_reduce_64k_x64",
+                 "us_per_call": round(_time(f, vals, segs), 1)})
+
+    build = jnp.asarray(np.sort(rng.integers(0, 1 << 40, 1 << 16)))
+    probe = jnp.asarray(np.sort(rng.integers(0, 1 << 40, 1 << 16)))
+    f = jax.jit(lambda b, p: ops.merge_probe_counts(b, p))
+    rows.append({"table": "kernels", "name": "merge_probe_64k",
+                 "us_per_call": round(_time(f, build, probe), 1)})
+
+    x = jnp.asarray(rng.normal(size=(4096, 39)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(39, 10)), jnp.float32)
+    f = jax.jit(ops.fm_interaction)
+    rows.append({"table": "kernels", "name": "fm_interaction_4k",
+                 "us_per_call": round(_time(f, x, v), 1)})
+
+    q = jnp.asarray(rng.normal(size=(1, 8, 512, 64)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(1, 8, 512, 64)), jnp.bfloat16)
+    f = jax.jit(lambda q, k, v: ops.flash_attention(q, k, v))
+    rows.append({"table": "kernels", "name": "attention_512_xla",
+                 "us_per_call": round(_time(f, q, k, k), 1)})
+    return rows

@@ -1,0 +1,128 @@
+"""The paper's benchmark programs (Sec. 10 'Programs and Datasets'),
+scaled to this container: graph queries (TC, Reach, SG, CC, SSSP),
+Bipartite, program analysis (Andersen), Dyck-2 reachability, and the
+Galen triangle fragment (Example 6.1)."""
+from __future__ import annotations
+
+import numpy as np
+
+TC = """
+.input edge
+.output tc
+tc(x,y) :- edge(x,y).
+tc(x,z) :- tc(x,y), edge(y,z).
+"""
+
+REACH = """
+.input edge
+.input source
+.output reach
+reach(x) :- source(x).
+reach(y) :- reach(x), edge(x, y).
+"""
+
+SG = """
+.input par
+.output sg
+sg(x,y) :- par(x,p), par(y,p), x != y.
+sg(x,y) :- par(x,px), sg(px,py), par(y,py).
+"""
+
+CC = """
+.input edge
+.output cc
+cc(x, MIN(x)) :- edge(x, _).
+cc(y, MIN(y)) :- edge(_, y).
+cc(x, MIN(i)) :- edge(y, x), cc(y, i).
+cc(x, MIN(i)) :- edge(x, y), cc(y, i).
+"""
+
+SSSP = """
+.input edge
+.input source
+.output dist
+dist(x, MIN(0)) :- source(x).
+dist(y, MIN(d + c)) :- dist(x, d), edge(x, y, c).
+"""
+
+BIPARTITE = """
+.input edge
+.input blue0
+.output answer
+blue(x) :- blue0(x).
+red(y) :- edge(x, y), blue(x).
+red(y) :- edge(y, x), blue(x).
+blue(y) :- edge(x, y), red(x).
+blue(y) :- edge(y, x), red(x).
+answer() :- red(x), blue(x).
+"""
+
+ANDERSEN = """
+.input addr
+.input assign
+.input load
+.input store
+.output pt
+pt(p, x) :- addr(p, x).
+pt(p, x) :- assign(p, q), pt(q, x).
+pt(p, x) :- load(p, q), pt(q, r), pt(r, x).
+pt(r, x) :- store(p, q), pt(p, r), pt(q, x).
+"""
+
+DYCK = """
+.input open1
+.input close1
+.input open2
+.input close2
+.input node
+.output d
+d(x, x) :- node(x).
+d(x, y) :- open1(x, z), d(z, w), close1(w, y).
+d(x, y) :- open2(x, z), d(z, w), close2(w, y).
+d(x, z) :- d(x, y), d(y, z).
+"""
+
+GALEN_TRIANGLE = """
+.input c
+.input e
+.output p
+p(x,z) :- e(x,z).
+p(x,z) :- c(y,w,z), p(x,w), p(x,y).
+"""
+
+
+def make_datasets(scale: float = 1.0, seed: int = 0) -> dict:
+    """Synthetic datasets per program; `scale` grows sizes."""
+    rng = np.random.default_rng(seed)
+    s = lambda n: max(8, int(n * scale))
+
+    def graph(n, m):
+        return rng.integers(0, s(n), size=(s(m), 2))
+
+    out = {
+        "TC": (TC, {"edge": graph(200, 600)}, "tc"),
+        "Reach": (REACH, {"edge": graph(2000, 8000),
+                          "source": np.array([[0]])}, "reach"),
+        "SG": (SG, {"par": graph(300, 500)}, "sg"),
+        "CC": (CC, {"edge": graph(3000, 6000)}, "cc"),
+        "SSSP": (SSSP, {
+            "edge": np.concatenate(
+                [graph(1500, 6000),
+                 rng.integers(1, 50, size=(s(6000), 1))], axis=1),
+            "source": np.array([[0]])}, "dist"),
+        "Bipartite": (BIPARTITE, {"edge": graph(2000, 5000),
+                                  "blue0": np.array([[0]])}, "answer"),
+        "Andersen": (ANDERSEN, {
+            "addr": graph(400, 300),
+            "assign": graph(400, 400),
+            "load": graph(400, 150),
+            "store": graph(400, 150)}, "pt"),
+        "Dyck": (DYCK, {
+            "open1": graph(150, 200), "close1": graph(150, 200),
+            "open2": graph(150, 200), "close2": graph(150, 200),
+            "node": np.arange(s(150))[:, None]}, "d"),
+        "Galen-tri": (GALEN_TRIANGLE, {
+            "c": rng.integers(0, s(60), size=(s(150), 3)),
+            "e": rng.integers(0, s(60), size=(s(120), 2))}, "p"),
+    }
+    return out

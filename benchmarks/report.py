@@ -1,0 +1,46 @@
+"""Injects the generated roofline + bench tables into EXPERIMENTS.md
+(replaces the <!-- ROOFLINE_TABLE --> / <!-- BENCH_TABLES --> markers)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.roofline import markdown_table
+
+
+def bench_tables(path="results/bench.json") -> str:
+    p = Path(path)
+    if not p.exists():
+        return "_run `python -m benchmarks.run` to populate_"
+    rows = json.loads(p.read_text())
+    by_table: dict[str, list[dict]] = {}
+    for r in rows:
+        by_table.setdefault(r.get("table", "?"), []).append(r)
+    out = []
+    for table in ("table1", "seminaive", "robustness_summary",
+                  "specialization", "incremental", "kernels"):
+        rs = by_table.get(table)
+        if not rs:
+            continue
+        cols = [k for k in rs[0] if k != "table"]
+        out.append(f"### {table}\n")
+        out.append("| " + " | ".join(cols) + " |")
+        out.append("|" + "---|" * len(cols))
+        for r in rs:
+            out.append("| " + " | ".join(
+                str(r.get(c, "")) for c in cols) + " |")
+        out.append("")
+    return "\n".join(out)
+
+
+def main():
+    md = Path("EXPERIMENTS.md")
+    text = md.read_text()
+    text = text.replace("<!-- ROOFLINE_TABLE -->", markdown_table())
+    text = text.replace("<!-- BENCH_TABLES -->", bench_tables())
+    md.write_text(text)
+    print("EXPERIMENTS.md tables injected")
+
+
+if __name__ == "__main__":
+    main()

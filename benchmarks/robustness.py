@@ -1,0 +1,134 @@
+"""Fig. 9 / Table 2 analogue: join-order robustness.
+
+For rules with recursive multiway joins we enumerate listing-order
+variants (like the paper's 91 variants) and run four optimizer settings:
+plan+sip / plan only / sip only / no-opt. The paper's claim: plan+sip
+never blows up; fixed listing orders do. Our blow-up proxy on fixed
+capacities is the auto-grow retry count + wall time."""
+from __future__ import annotations
+
+import itertools
+import time
+
+import numpy as np
+
+from repro.core.optimizer import CompileOptions, compile_program
+from repro.engine import Engine, EngineConfig
+
+SETTINGS = {
+    "plan+sip": CompileOptions(),
+    "plan": CompileOptions(use_sip=False),
+    "sip": CompileOptions(use_planner=False),
+    "noopt": CompileOptions(use_planner=False, use_sip=False),
+}
+
+# triangle rule (Galen r3 shape): all 3 listing orders of the body
+TRI_BODIES = [
+    "c(y,w,z), p(x,w), p(x,y)",
+    "p(x,w), c(y,w,z), p(x,y)",
+    "p(x,y), p(x,w), c(y,w,z)",
+]
+TRI_TEMPLATE = """
+.input c
+.input e
+.output p
+p(x,z) :- e(x,z).
+p(x,z) :- {body}.
+"""
+
+# 4-way chain-with-cycle rule, 6 sampled orders
+CHAIN_BODIES = [
+    "r(x,y), s(y,z), t(z,w), u(w,x)",
+    "u(w,x), t(z,w), s(y,z), r(x,y)",
+    "s(y,z), u(w,x), r(x,y), t(z,w)",
+    "t(z,w), r(x,y), u(w,x), s(y,z)",
+    "r(x,y), u(w,x), s(y,z), t(z,w)",
+    "u(w,x), s(y,z), r(x,y), t(z,w)",
+]
+CHAIN_TEMPLATE = """
+.input r0
+.input s
+.input t
+.input u
+.output q
+.output r
+r(x,y) :- r0(x,y).
+r(x,y) :- q(x,y).
+q(x,w) :- {body}.
+"""
+
+
+def _run(src, edbs, opts, cap=1 << 14, inter=1 << 16):
+    cp = compile_program(src, opts)
+    eng = Engine(cp, EngineConfig(idb_cap=cap, intermediate_cap=inter,
+                                  max_grow_retries=6))
+    t0 = time.perf_counter()
+    grow0 = eng.cfg.intermediate_cap
+    out, stats = eng.run(edbs)
+    wall = time.perf_counter() - t0
+    grows = int(np.log2(eng.cfg.intermediate_cap // grow0))
+    return wall, grows, stats
+
+
+def bench() -> list[dict]:
+    rng = np.random.default_rng(3)
+    rows = []
+
+    tri_edbs = {
+        "c": rng.integers(0, 40, size=(120, 3)),
+        "e": rng.integers(0, 40, size=(90, 2)),
+    }
+    for i, body in enumerate(TRI_BODIES):
+        src = TRI_TEMPLATE.format(body=body)
+        row = {"table": "robustness", "rule": "galen_r3",
+               "order": i}
+        for label, opts in SETTINGS.items():
+            try:
+                wall, grows, _ = _run(src, tri_edbs, opts)
+                row[f"{label}_s"] = round(wall, 3)
+                row[f"{label}_grows"] = grows
+            except Exception as e:  # noqa: BLE001
+                row[f"{label}_s"] = None
+                row[f"{label}_err"] = repr(e)[:60]
+        rows.append(row)
+
+    chain_edbs = {
+        "r0": rng.integers(0, 60, size=(150, 2)),
+        "s": rng.integers(0, 60, size=(150, 2)),
+        "t": rng.integers(0, 60, size=(150, 2)),
+        "u": rng.integers(0, 60, size=(150, 2)),
+    }
+    for i, body in enumerate(CHAIN_BODIES):
+        src = CHAIN_TEMPLATE.format(body=body)
+        row = {"table": "robustness", "rule": "cyclic_4way",
+               "order": i}
+        for label, opts in SETTINGS.items():
+            try:
+                wall, grows, _ = _run(src, chain_edbs, opts)
+                row[f"{label}_s"] = round(wall, 3)
+                row[f"{label}_grows"] = grows
+            except Exception as e:  # noqa: BLE001
+                row[f"{label}_s"] = None
+                row[f"{label}_err"] = repr(e)[:60]
+        rows.append(row)
+    return rows
+
+
+def summarize(rows: list[dict]) -> list[dict]:
+    out = []
+    for setting in SETTINGS:
+        times = [r[f"{setting}_s"] for r in rows
+                 if r.get(f"{setting}_s") is not None]
+        grows = [r.get(f"{setting}_grows", 0) for r in rows
+                 if r.get(f"{setting}_s") is not None]
+        fails = sum(1 for r in rows if r.get(f"{setting}_s") is None)
+        out.append({
+            "table": "robustness_summary",
+            "setting": setting,
+            "median_s": round(float(np.median(times)), 3) if times else None,
+            "max_s": round(max(times), 3) if times else None,
+            "capacity_grows_total": int(sum(grows)),
+            "failures": fails,
+            "n_orders": len(rows),
+        })
+    return out

@@ -1,0 +1,60 @@
+"""Roofline table builder: reads results/dryrun/*.json (the compiled
+dry-run artifacts) and emits the EXPERIMENTS.md §Roofline rows."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+
+def load_cells(dryrun_dir="results/dryrun") -> list[dict]:
+    cells = []
+    for p in sorted(Path(dryrun_dir).glob("*.json")):
+        cells.append(json.loads(p.read_text()))
+    return cells
+
+
+def rows(dryrun_dir="results/dryrun", mesh="16x16") -> list[dict]:
+    out = []
+    for c in load_cells(dryrun_dir):
+        if not c.get("ok"):
+            out.append({"table": "roofline", "arch": c["arch"],
+                        "shape": c["shape"], "mesh": c.get("mesh"),
+                        "error": c.get("error", "?")[:60]})
+            continue
+        if c["mesh"] != mesh:
+            continue
+        r = c["roofline"]
+        out.append({
+            "table": "roofline",
+            "arch": c["arch"],
+            "shape": c["shape"],
+            "mesh": c["mesh"],
+            "compute_s": f"{r['compute_s']:.3e}",
+            "memory_s": f"{r['memory_s']:.3e}",
+            "collective_s": f"{r['collective_s']:.3e}",
+            "dominant": r["dominant"],
+            "useful_flops_ratio": (
+                round(r["useful_flops_ratio"], 3)
+                if r["useful_flops_ratio"] else None),
+            "compile_s": c["compile_s"],
+        })
+    return out
+
+
+def markdown_table(dryrun_dir="results/dryrun", mesh="16x16") -> str:
+    lines = [
+        "| arch | shape | compute_s | memory_s | collective_s | "
+        "dominant | useful/HLO flops |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in rows(dryrun_dir, mesh):
+        if "error" in r:
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | FAILED: {r['error']} | "
+                f"| | | |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']} | "
+            f"{r['memory_s']} | {r['collective_s']} | {r['dominant']} | "
+            f"{r['useful_flops_ratio']} |")
+    return "\n".join(lines)

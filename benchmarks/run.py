@@ -1,0 +1,80 @@
+"""Benchmark runner — one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only table1,robustness]
+
+Prints ``name,us_per_call,derived`` CSV rows (derived = JSON blob of the
+table-specific fields) and writes results/bench.json.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+ALL_TABLES = ("table1", "seminaive", "robustness", "specialization",
+              "incremental", "kernels", "roofline")
+
+
+def collect(only=None) -> list[dict]:
+    only = set(only or ALL_TABLES)
+    rows: list[dict] = []
+    if "table1" in only:
+        from benchmarks.paper_programs import bench
+        rows += bench()
+    if "seminaive" in only:
+        from benchmarks.paper_programs import bench_seminaive_vs_naive
+        rows += bench_seminaive_vs_naive()
+    if "robustness" in only:
+        from benchmarks.robustness import bench, summarize
+        r = bench()
+        rows += r + summarize(r)
+    if "specialization" in only:
+        from benchmarks.specialization import bench
+        rows += bench()
+    if "incremental" in only:
+        from benchmarks.incremental_bench import bench
+        rows += bench()
+    if "kernels" in only:
+        from benchmarks.kernels_bench import bench
+        rows += bench()
+    if "roofline" in only:
+        from benchmarks.roofline import rows as roof_rows
+        try:
+            rows += roof_rows()
+        except Exception as e:  # noqa: BLE001
+            rows.append({"table": "roofline", "error": repr(e)})
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help=f"comma list of {ALL_TABLES}")
+    ap.add_argument("--out", default="results/bench.json")
+    args = ap.parse_args()
+    only = args.only.split(",") if args.only else None
+
+    rows = collect(only)
+    print("name,us_per_call,derived")
+    for r in rows:
+        name = "/".join(str(r.get(k)) for k in
+                        ("table", "program", "arch", "name", "rule",
+                         "shape", "setting", "order", "update_size",
+                         "kind") if r.get(k) is not None)
+        us = r.get("us_per_call")
+        if us is None:
+            for k in ("flowlog_s", "incremental_s", "presence_s",
+                      "median_s"):
+                if r.get(k) is not None:
+                    us = round(r[k] * 1e6, 1)
+                    break
+        derived = {k: v for k, v in r.items() if k != "table"}
+        print(f"{name},{us},{json.dumps(derived)}")
+    out = Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(rows, indent=1))
+    print(f"\n# wrote {len(rows)} rows to {out}")
+
+
+if __name__ == "__main__":
+    main()

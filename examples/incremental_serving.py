@@ -1,0 +1,69 @@
+"""End-to-end incremental Datalog serving — the paper's 'kind' of
+deployment (DDlog's use case, Sec. 9): materialize views over a live
+fact stream, answer after every update batch, track latency.
+
+    PYTHONPATH=src python examples/incremental_serving.py [--updates 30]
+"""
+import argparse
+import time
+
+import numpy as np
+
+from repro.core.optimizer import compile_program
+from repro.engine import EngineConfig
+from repro.engine.incremental import IncrementalEngine
+
+# network reachability monitoring: link updates stream in; the view is
+# which hosts can reach the monitoring target, avoiding quarantined ones
+PROGRAM = """
+.input link
+.input monitor
+.input quarantined
+.output reaches
+reaches(x) :- monitor(x).
+reaches(y) :- reaches(x), link(x, y), !quarantined(y).
+.output pathlen
+pathlen(x, MIN(0)) :- monitor(x).
+pathlen(y, MIN(d + 1)) :- pathlen(x, d), link(x, y), !quarantined(y).
+"""
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--updates", type=int, default=30)
+    ap.add_argument("--hosts", type=int, default=200)
+    args = ap.parse_args()
+
+    rng = np.random.default_rng(1)
+    links = rng.integers(0, args.hosts, size=(args.hosts * 4, 2))
+
+    inc = IncrementalEngine(compile_program(PROGRAM), EngineConfig(
+        idb_cap=1 << 12, intermediate_cap=1 << 14))
+    t0 = time.perf_counter()
+    out = inc.initialize({
+        "link": links,
+        "monitor": np.array([[0]]),
+        "quarantined": np.array([[7], [23]]),
+    })
+    print(f"initialized: {out['reaches'].shape[0]} reachable hosts "
+          f"({time.perf_counter() - t0:.2f}s)")
+
+    lat = []
+    for step in range(args.updates):
+        ins = rng.integers(0, args.hosts, size=(3, 2))
+        cur = np.array(sorted(inc.edbs["link"]))
+        dele = cur[rng.permutation(len(cur))[:2]]
+        t0 = time.perf_counter()
+        out = inc.apply(inserts={"link": ins}, deletes={"link": dele})
+        lat.append(time.perf_counter() - t0)
+    lat_ms = np.array(lat) * 1e3
+    print(f"{args.updates} update batches: "
+          f"p50={np.percentile(lat_ms, 50):.0f}ms "
+          f"p99={np.percentile(lat_ms, 99):.0f}ms "
+          f"view={out['reaches'].shape[0]} hosts, "
+          f"max hop count={out['pathlen'][:, 1].max()}")
+    print("incremental_serving OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""repro — FlowLog-JAX: Datalog via incrementality on TPU.
+
+The engine packs 62-bit join keys into int64, which requires JAX's x64
+mode. It is enabled here, at package import, so every subsystem sees one
+consistent configuration. Model/launch code never relies on implicit
+64-bit defaults: all dtypes are explicit (bf16/f32 params, int32 ids).
+"""
+import jax as _jax
+
+_jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,34 @@
+"""Architecture registry: ``get_arch(name)`` -> ArchSpec.
+
+Every assigned architecture is a module exporting ``ARCH``; the registry
+maps ``--arch <id>`` CLI names to them.
+"""
+from __future__ import annotations
+
+import importlib
+
+_ARCH_MODULES = {
+    "granite-moe-3b-a800m": "repro.configs.granite_moe_3b",
+    "granite-moe-1b-a400m": "repro.configs.granite_moe_1b",
+    "gemma-7b": "repro.configs.gemma_7b",
+    "chatglm3-6b": "repro.configs.chatglm3_6b",
+    "qwen3-1.7b": "repro.configs.qwen3_1_7b",
+    "gatedgcn": "repro.configs.gatedgcn",
+    "dimenet": "repro.configs.dimenet",
+    "nequip": "repro.configs.nequip",
+    "gat-cora": "repro.configs.gat_cora",
+    "fm": "repro.configs.fm",
+}
+
+ARCH_NAMES = tuple(_ARCH_MODULES)
+
+
+def get_arch(name: str):
+    if name not in _ARCH_MODULES:
+        raise KeyError(
+            f"unknown arch {name!r}; available: {sorted(_ARCH_MODULES)}")
+    return importlib.import_module(_ARCH_MODULES[name]).ARCH
+
+
+def all_archs():
+    return {name: get_arch(name) for name in _ARCH_MODULES}

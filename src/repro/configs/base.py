@@ -1,0 +1,686 @@
+"""ArchSpec — the contract between configs, the launcher, the dry-run
+and the roofline harness.
+
+An ArchSpec provides, per named input shape:
+  input_specs(shape)   — jax.ShapeDtypeStruct stand-ins for every input
+  step_fn(shape)       — the function to lower (train_step / serve_step)
+  init_abstract(shape) — ShapeDtypeStructs for the state argument
+                         (params or TrainState or KV cache), so the
+                         dry-run never allocates memory
+  shardings(mesh, shape) — (in_shardings, out_shardings) pytrees
+  init_smoke(rng)      — a REDUCED config instance with real params for
+                         CPU smoke tests
+  model_flops(shape)   — analytic MODEL_FLOPS for the roofline's
+                         useful-compute ratio (6·N·D for LMs)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import transformer as T
+from repro.models.moe import MoEConfig
+from repro.training.optim import AdamWConfig, TrainState, adamw_update
+
+
+@dataclass(frozen=True)
+class Shape:
+    name: str
+    kind: str                  # train | prefill | decode | graph | recsys
+    sizes: dict
+    note: str = ""
+
+
+def _abstract_like(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def data_axes(mesh) -> tuple:
+    """Batch-parallel axes: ('pod', 'data') on the multi-pod mesh."""
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names)
+
+
+# ---------------------------------------------------------------------------
+# LM family
+# ---------------------------------------------------------------------------
+
+LM_SHAPES = {
+    "train_4k": Shape("train_4k", "train",
+                      dict(seq_len=4096, global_batch=256)),
+    "prefill_32k": Shape("prefill_32k", "prefill",
+                         dict(seq_len=32768, global_batch=32)),
+    "decode_32k": Shape("decode_32k", "decode",
+                        dict(seq_len=32768, global_batch=128)),
+    "long_500k": Shape(
+        "long_500k", "decode", dict(seq_len=524288, global_batch=1),
+        note=("long-context DECODE lowers (O(L) per token, KV sharded); "
+              "prefill at 500k would need sub-quadratic attention, which "
+              "no assigned LM arch has — see DESIGN.md")),
+}
+
+
+@dataclass(frozen=True)
+class LMArch:
+    name: str
+    cfg: T.TransformerConfig
+    smoke_cfg: T.TransformerConfig
+    family: str = "lm"
+    opt: AdamWConfig = AdamWConfig()
+    # beyond-paper perf option (EXPERIMENTS.md §Perf): train_4k shards
+    # params over ALL mesh axes (ZeRO-3/FSDP) and the batch over
+    # (data x model) — no TP activation all-reduces. Dense LMs only.
+    fsdp_train: bool = False
+
+    @property
+    def shapes(self):
+        return LM_SHAPES
+
+    # -- abstract inputs ----------------------------------------------------
+    def input_specs(self, shape_name: str, smoke: bool = False):
+        cfg = self.smoke_cfg if smoke else self.cfg
+        sh = self.shapes[shape_name]
+        s = sh.sizes
+        seq, b = s["seq_len"], s["global_batch"]
+        if smoke:
+            seq, b = min(seq, 128), min(b, 4)
+        i32 = jnp.int32
+        if sh.kind == "train":
+            return dict(
+                tokens=jax.ShapeDtypeStruct((b, seq), i32),
+                labels=jax.ShapeDtypeStruct((b, seq), i32))
+        if sh.kind == "prefill":
+            return dict(tokens=jax.ShapeDtypeStruct((b, seq), i32))
+        # decode: one token + cache of capacity seq
+        dt = cfg.compute_dtype
+        L, hkv, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
+        return dict(
+            token=jax.ShapeDtypeStruct((b, 1), i32),
+            cache=T.KVCache(
+                k=jax.ShapeDtypeStruct((L, b, hkv, seq, hd), dt),
+                v=jax.ShapeDtypeStruct((L, b, hkv, seq, hd), dt),
+                length=jax.ShapeDtypeStruct((b,), i32)))
+
+    def state_specs(self, shape_name: str, smoke: bool = False):
+        cfg = self.smoke_cfg if smoke else self.cfg
+        params = jax.eval_shape(partial(T.init_params, cfg=cfg),
+                                jax.random.PRNGKey(0))
+        if self.shapes[shape_name].kind == "train":
+            mu = jax.tree.map(
+                lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32),
+                params)
+            return TrainState(params, mu, mu,
+                              jax.ShapeDtypeStruct((), jnp.int32))
+        return params
+
+    # -- step functions -------------------------------------------------------
+    def step_fn(self, shape_name: str, smoke: bool = False,
+                unroll: bool = False) -> Callable:
+        from dataclasses import replace as _replace
+        cfg = self.smoke_cfg if smoke else self.cfg
+        if unroll:
+            cfg = _replace(cfg, scan_layers=False)
+        kind = self.shapes[shape_name].kind
+        if kind == "train" and self.fsdp_train and not smoke:
+            cfg = _replace(cfg, batch_shard_all=True)
+        opt = self.opt
+
+        if kind == "train":
+            def train_step(state: TrainState, batch):
+                def loss(p):
+                    return T.loss_fn(p, cfg, batch["tokens"],
+                                     batch["labels"])
+                (l, ce), grads = jax.value_and_grad(
+                    loss, has_aux=True)(state.params)
+                new_state, gnorm = adamw_update(state, grads, opt)
+                return new_state, {"loss": l, "ce": ce, "gnorm": gnorm}
+            return train_step
+        if kind == "prefill":
+            def serve_prefill(params, batch):
+                logits, cache = T.prefill(params, cfg, batch["tokens"])
+                return logits, cache.length
+            return serve_prefill
+
+        def serve_decode(params, batch):
+            logits, cache = T.decode_step(
+                params, cfg, batch["token"], batch["cache"])
+            return logits, cache
+        return serve_decode
+
+    # -- shardings -------------------------------------------------------------
+    def param_pspecs(self, mesh):
+        m = "model"
+        lay = {
+            "wq": P(None, None, m), "wk": P(None, None, m),
+            "wv": P(None, None, m), "wo": P(None, m, None),
+            "ln1": P(None, None), "ln2": P(None, None),
+        }
+        if self.cfg.qk_norm:
+            lay["qnorm"] = P(None, None)
+            lay["knorm"] = P(None, None)
+        if self.cfg.moe:
+            msize = dict(zip(mesh.axis_names, mesh.devices.shape))[m]
+            if self.cfg.moe.n_experts % msize == 0:
+                # expert parallelism: experts sharded over the model axis
+                moe = {
+                    "router": P(None, None, None),
+                    "w_in": P(None, m, None, None),
+                    "w_out": P(None, m, None, None),
+                }
+                if self.cfg.moe.glu:
+                    moe["w_gate"] = P(None, m, None, None)
+            else:
+                # expert count not divisible (granite-3b: 40 experts on a
+                # 16-way axis): TP inside each expert — shard d_ff
+                moe = {
+                    "router": P(None, None, None),
+                    "w_in": P(None, None, None, m),
+                    "w_out": P(None, None, m, None),
+                }
+                if self.cfg.moe.glu:
+                    moe["w_gate"] = P(None, None, None, m)
+            lay["moe"] = moe
+        else:
+            lay["w_in"] = P(None, None, m)
+            lay["w_out"] = P(None, m, None)
+            if self.cfg.glu:
+                lay["w_gate"] = P(None, None, m)
+        specs = {"embed": P(m, None), "ln_f": P(None), "layers": lay}
+        if not self.cfg.tie_embeddings:
+            specs["unembed"] = P(None, m)
+        return specs
+
+    def fsdp_pspecs(self, mesh):
+        """Shard every weight over ALL mesh axes on its first divisible
+        dim >= the axis product; replicate small leaves (norms)."""
+        all_ax = tuple(mesh.axis_names)
+        n_all = int(np.prod(mesh.devices.shape))
+        params = self.state_specs("train_4k").params
+
+        def spec_for(leaf):
+            for dim in range(1, leaf.ndim):   # dim0 is the layer stack
+                if leaf.shape[dim] % n_all == 0:
+                    ent = [None] * leaf.ndim
+                    ent[dim] = all_ax
+                    return P(*ent)
+            if leaf.ndim and leaf.shape[0] % n_all == 0:
+                ent = [None] * leaf.ndim
+                ent[0] = all_ax
+                return P(*ent)
+            return P(*([None] * leaf.ndim))
+
+        return jax.tree.map(spec_for, params)
+
+    def shardings(self, mesh, shape_name: str):
+        d = data_axes(mesh)
+        dax = d if len(d) > 1 else (d[0] if d else None)
+        pspecs = self.param_pspecs(mesh)
+        kind = self.shapes[shape_name].kind
+        b = self.shapes[shape_name].sizes["global_batch"]
+        batch_ax = dax if b > 1 else None
+        if kind == "train":
+            if self.fsdp_train:
+                pspecs = self.fsdp_pspecs(mesh)
+                all_ax = tuple(mesh.axis_names)
+                n_all = int(np.prod(mesh.devices.shape))
+                if b % n_all == 0:
+                    batch_ax = all_ax
+                # else: batch over (pod, data); sequence over model is
+                # constrained inside the model (_fsdp_shard DP x SP)
+            state = TrainState(pspecs,
+                               jax.tree.map(lambda s: s, pspecs),
+                               jax.tree.map(lambda s: s, pspecs),
+                               P())
+            batch = dict(tokens=P(batch_ax, None),
+                         labels=P(batch_ax, None))
+            out = (state, {"loss": P(), "ce": P(), "gnorm": P()})
+            return (state, batch), out
+        if kind == "prefill":
+            batch = dict(tokens=P(batch_ax, None))
+            cache_len = P(batch_ax)
+            out = (P(batch_ax, "model"), cache_len)
+            return (pspecs, batch), out
+        # decode: KV sequence sharded over model; when batch cannot be
+        # data-sharded (long_500k, b=1) the sequence takes every mesh
+        # axis so the 500k cache spreads across all chips
+        if b == 1:
+            seq_ax = tuple(list(d) + ["model"])
+            cache = T.KVCache(
+                k=P(None, None, None, seq_ax, None),
+                v=P(None, None, None, seq_ax, None),
+                length=P(None))
+            batch = dict(token=P(None, None), cache=cache)
+            out = (P(None, "model"), cache)
+            return (pspecs, batch), out
+        cache = T.KVCache(
+            k=P(None, batch_ax, None, "model", None),
+            v=P(None, batch_ax, None, "model", None),
+            length=P(batch_ax))
+        batch = dict(token=P(batch_ax, None), cache=cache)
+        out = (P(batch_ax, "model"), cache)
+        return (pspecs, batch), out
+
+    # -- smoke / metrics ---------------------------------------------------------
+    def init_smoke(self, rng):
+        return T.init_params(rng, self.smoke_cfg)
+
+    def model_flops(self, shape_name: str) -> float:
+        s = self.shapes[shape_name].sizes
+        n = self.cfg.active_param_count()
+        if self.shapes[shape_name].kind == "train":
+            tokens = s["seq_len"] * s["global_batch"]
+            return 6.0 * n * tokens
+        if self.shapes[shape_name].kind == "prefill":
+            tokens = s["seq_len"] * s["global_batch"]
+            return 2.0 * n * tokens
+        return 2.0 * n * s["global_batch"]       # decode: per new token
+
+
+# ---------------------------------------------------------------------------
+# GNN family
+# ---------------------------------------------------------------------------
+
+def _fanout_caps(batch_nodes=1024, fanouts=(15, 10)):
+    """Fixed capacities for the fanout-sampled subgraph (minibatch_lg)."""
+    nodes, edges, frontier = batch_nodes, 0, batch_nodes
+    for f in fanouts:
+        new = frontier * f
+        edges += new
+        nodes += new
+        frontier = new
+    return nodes, edges
+
+
+GNN_SHAPES = {
+    "full_graph_sm": Shape(
+        "full_graph_sm", "graph",
+        dict(n_nodes=2708, n_edges=10556, d_feat=1433, triplet_mult=8)),
+    "minibatch_lg": Shape(
+        "minibatch_lg", "graph",
+        dict(n_nodes=_fanout_caps()[0], n_edges=_fanout_caps()[1],
+             d_feat=602, triplet_mult=4,
+             base_nodes=232965, base_edges=114615892,
+             batch_nodes=1024, fanout=(15, 10)),
+        note="fixed-capacity fanout-(15,10) sampled subgraph; sampler in "
+             "repro.data.sampler"),
+    "ogb_products": Shape(
+        "ogb_products", "graph",
+        dict(n_nodes=2449029, n_edges=61859140, d_feat=100,
+             triplet_mult=2)),
+    "molecule": Shape(
+        "molecule", "graph",
+        dict(n_nodes=30 * 128, n_edges=64 * 128, d_feat=16,
+             triplet_mult=16, batch=128)),
+}
+
+
+@dataclass(frozen=True)
+class GNNArch:
+    name: str
+    kind: str                    # "feature" (gatedgcn, gat) | "geometric"
+    make_cfg: Callable           # (d_feat, smoke) -> model config
+    init_fn: Callable            # (key, cfg) -> params
+    fwd_fn: Callable             # (params, cfg, graph) -> node outputs
+    n_classes: int = 16
+    family: str = "gnn"
+    opt: AdamWConfig = AdamWConfig(lr=1e-3)
+    shard_nodes: bool = False   # perf iteration (EXPERIMENTS.md §Perf)
+
+    @property
+    def shapes(self):
+        return GNN_SHAPES
+
+    def _dims(self, shape_name, smoke):
+        s = dict(self.shapes[shape_name].sizes)
+        if smoke:
+            s["n_nodes"] = min(s["n_nodes"], 64)
+            s["n_edges"] = min(s["n_edges"], 256)
+            s["d_feat"] = min(s["d_feat"], 24)
+        # edge/node relations shard over up to 32 devices (pod x data)
+        # resp. 16 (model): round fixed capacities up (padded edges
+        # target a sacrificial node slot, the engine's bounded-relation
+        # idiom; padded nodes are isolated)
+        s["n_edges"] = ((s["n_edges"] + 31) // 32) * 32
+        s["n_nodes"] = ((s["n_nodes"] + 31) // 32) * 32
+        return s
+
+    def input_specs(self, shape_name: str, smoke: bool = False):
+        s = self._dims(shape_name, smoke)
+        N, E = s["n_nodes"], s["n_edges"]
+        i32, f32 = jnp.int32, jnp.float32
+        base = dict(
+            senders=jax.ShapeDtypeStruct((E,), i32),
+            receivers=jax.ShapeDtypeStruct((E,), i32),
+        )
+        if self.kind == "feature":
+            base["node_feat"] = jax.ShapeDtypeStruct((N, s["d_feat"]), f32)
+            base["edge_feat"] = jax.ShapeDtypeStruct((E, 1), f32)
+            base["labels"] = jax.ShapeDtypeStruct((N,), i32)
+        else:
+            base["positions"] = jax.ShapeDtypeStruct((N, 3), f32)
+            base["species"] = jax.ShapeDtypeStruct((N,), i32)
+            base["energy_labels"] = jax.ShapeDtypeStruct((N,), f32)
+            if self.name == "dimenet":
+                T_ = E * s.get("triplet_mult", 4)
+                base["t_kj"] = jax.ShapeDtypeStruct((T_,), i32)
+                base["t_ji"] = jax.ShapeDtypeStruct((T_,), i32)
+        return base
+
+    def state_specs(self, shape_name: str, smoke: bool = False):
+        s = self._dims(shape_name, smoke)
+        cfg = self.make_cfg(s["d_feat"], smoke)
+        params = jax.eval_shape(
+            partial(self.init_fn, cfg=cfg), jax.random.PRNGKey(0))
+        mu = jax.tree.map(
+            lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), params)
+        return TrainState(params, mu, mu,
+                          jax.ShapeDtypeStruct((), jnp.int32))
+
+    def step_fn(self, shape_name: str, smoke: bool = False,
+                unroll: bool = False) -> Callable:
+        s = self._dims(shape_name, smoke)
+        cfg = self.make_cfg(s["d_feat"], smoke)
+        if unroll and hasattr(cfg, "_replace") and hasattr(cfg, "unroll"):
+            cfg = cfg._replace(unroll=True)
+        if (self.shard_nodes and not smoke and hasattr(cfg, "_replace")
+                and hasattr(cfg, "shard_nodes")):
+            cfg = cfg._replace(shard_nodes=True)
+        opt = self.opt
+        fwd = self.fwd_fn
+        feature = self.kind == "feature"
+        is_dimenet = self.name == "dimenet"
+
+        def train_step(state: TrainState, batch):
+            def loss(p):
+                if feature:
+                    from repro.models.gnn.common import Graph
+                    g = Graph(batch["senders"], batch["receivers"],
+                              batch["node_feat"], batch.get("edge_feat"),
+                              jnp.asarray(batch["node_feat"].shape[0]),
+                              jnp.asarray(batch["senders"].shape[0]))
+                    logits = fwd(p, cfg, g)
+                    from repro.models.common import cross_entropy_loss
+                    return cross_entropy_loss(logits, batch["labels"])
+                if is_dimenet:
+                    from repro.models.gnn.dimenet import GeoGraph
+                    g = GeoGraph(batch["positions"], batch["species"],
+                                 batch["senders"], batch["receivers"],
+                                 batch["t_kj"], batch["t_ji"])
+                else:
+                    from repro.models.gnn.nequip import GeoGraph
+                    g = GeoGraph(batch["positions"], batch["species"],
+                                 batch["senders"], batch["receivers"])
+                energy = fwd(p, cfg, g)
+                err = energy - batch["energy_labels"]
+                return jnp.mean(err * err)
+            l, grads = jax.value_and_grad(loss)(state.params)
+            new_state, gnorm = adamw_update(state, grads, opt)
+            return new_state, {"loss": l, "gnorm": gnorm}
+        return train_step
+
+    def shardings(self, mesh, shape_name: str):
+        d = data_axes(mesh)
+        dax = d if len(d) > 1 else (d[0] if d else None)
+        pspec = jax.tree.map(
+            lambda _: P(), self.state_specs(shape_name))
+        specs = self.input_specs(shape_name)
+        batch = {}
+        for k, v in specs.items():
+            if k in ("senders", "receivers", "t_kj", "t_ji",
+                     "edge_feat"):
+                batch[k] = P(dax) if v.ndim == 1 else P(dax, None)
+            else:
+                batch[k] = P(*([None] * v.ndim))
+        out = (pspec, {"loss": P(), "gnorm": P()})
+        return (pspec, batch), out
+
+    def init_smoke(self, rng, shape_name="full_graph_sm"):
+        s = self._dims(shape_name, True)
+        cfg = self.make_cfg(s["d_feat"], True)
+        return self.init_fn(rng, cfg), cfg
+
+    def model_flops(self, shape_name: str) -> float:
+        # message passing: ~2 * E * d^2 per layer matmul-equivalent +
+        # 2 * N * d^2 node transforms; x3 for fwd+bwd
+        s = self.shapes[shape_name].sizes
+        cfg = self.make_cfg(s["d_feat"], False)
+        d = getattr(cfg, "d_hidden", getattr(cfg, "channels", 64))
+        L = getattr(cfg, "n_layers", getattr(cfg, "n_blocks", 2))
+        flops = 2.0 * (s["n_edges"] + s["n_nodes"]) * d * d * L * 3
+        return flops
+
+
+# ---------------------------------------------------------------------------
+# RecSys family
+# ---------------------------------------------------------------------------
+
+RECSYS_SHAPES = {
+    "train_batch": Shape("train_batch", "recsys_train",
+                         dict(batch=65536)),
+    "serve_p99": Shape("serve_p99", "recsys_serve", dict(batch=512)),
+    "serve_bulk": Shape("serve_bulk", "recsys_serve",
+                        dict(batch=262144)),
+    "retrieval_cand": Shape("retrieval_cand", "recsys_retrieval",
+                            dict(batch=1, n_candidates=1_000_000)),
+}
+
+
+@dataclass(frozen=True)
+class RecsysArch:
+    name: str
+    cfg: "object"
+    smoke_cfg: "object"
+    family: str = "recsys"
+    opt: AdamWConfig = AdamWConfig(lr=1e-3, weight_decay=0.0)
+
+    @property
+    def shapes(self):
+        return RECSYS_SHAPES
+
+    def input_specs(self, shape_name: str, smoke: bool = False):
+        from repro.models.recsys.fm import FMConfig
+        cfg = self.smoke_cfg if smoke else self.cfg
+        sh = self.shapes[shape_name]
+        s = dict(sh.sizes)
+        if smoke:
+            s["batch"] = min(s["batch"], 32)
+            if "n_candidates" in s:
+                s["n_candidates"] = min(s["n_candidates"], 1024)
+        i32 = jnp.int32
+        if sh.kind == "recsys_retrieval":
+            return dict(
+                context_ids=jax.ShapeDtypeStruct((cfg.n_fields,), i32),
+                candidate_ids=jax.ShapeDtypeStruct(
+                    (s["n_candidates"],), i32))
+        base = dict(ids=jax.ShapeDtypeStruct(
+            (s["batch"], cfg.n_fields), i32))
+        if sh.kind == "recsys_train":
+            base["labels"] = jax.ShapeDtypeStruct((s["batch"],), i32)
+        return base
+
+    def state_specs(self, shape_name: str, smoke: bool = False):
+        from repro.models.recsys import fm as FM
+        cfg = self.smoke_cfg if smoke else self.cfg
+        params = jax.eval_shape(
+            partial(FM.init_params, cfg=cfg), jax.random.PRNGKey(0))
+        if self.shapes[shape_name].kind == "recsys_train":
+            mu = jax.tree.map(
+                lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32),
+                params)
+            return TrainState(params, mu, mu,
+                              jax.ShapeDtypeStruct((), jnp.int32))
+        return params
+
+    def step_fn(self, shape_name: str, smoke: bool = False,
+                unroll: bool = False) -> Callable:
+        del unroll  # no layer loop in FM
+        from repro.models.recsys import fm as FM
+        cfg = self.smoke_cfg if smoke else self.cfg
+        kind = self.shapes[shape_name].kind
+        opt = self.opt
+        if kind == "recsys_train":
+            def train_step(state: TrainState, batch):
+                l, grads = jax.value_and_grad(
+                    lambda p: FM.loss_fn(p, cfg, batch["ids"],
+                                         batch["labels"]))(state.params)
+                new_state, gnorm = adamw_update(state, grads, opt)
+                return new_state, {"loss": l, "gnorm": gnorm}
+            return train_step
+        if kind == "recsys_serve":
+            def serve(params, batch):
+                return FM.forward(params, cfg, batch["ids"])
+            return serve
+
+        def retrieve(params, batch):
+            return FM.retrieval_scores(
+                params, cfg, batch["context_ids"], batch["candidate_ids"])
+        return retrieve
+
+    def shardings(self, mesh, shape_name: str):
+        d = data_axes(mesh)
+        dax = d if len(d) > 1 else (d[0] if d else None)
+        pspec = {"v": P("model", None), "w": P("model", None), "b": P()}
+        kind = self.shapes[shape_name].kind
+        if kind == "recsys_train":
+            state = TrainState(
+                pspec, jax.tree.map(lambda s: s, pspec),
+                jax.tree.map(lambda s: s, pspec), P())
+            batch = dict(ids=P(dax, None), labels=P(dax))
+            return ((state, batch),
+                    (state, {"loss": P(), "gnorm": P()}))
+        if kind == "recsys_serve":
+            return ((pspec, dict(ids=P(dax, None))), P(dax))
+        batch = dict(context_ids=P(None), candidate_ids=P(dax))
+        return ((pspec, batch), P(dax))
+
+    def init_smoke(self, rng):
+        from repro.models.recsys import fm as FM
+        return FM.init_params(rng, self.smoke_cfg)
+
+    def model_flops(self, shape_name: str) -> float:
+        cfg = self.cfg
+        s = self.shapes[shape_name].sizes
+        per_ex = 4.0 * cfg.n_fields * cfg.embed_dim   # sum-square trick
+        if self.shapes[shape_name].kind == "recsys_retrieval":
+            return 2.0 * s["n_candidates"] * cfg.embed_dim
+        mult = 3.0 if self.shapes[shape_name].kind == "recsys_train" else 1.0
+        return per_ex * s["batch"] * mult
+
+
+# ---------------------------------------------------------------------------
+# Roofline traffic models (per-device HBM bytes per step)
+# ---------------------------------------------------------------------------
+# The XLA-CPU backend's "bytes accessed" reflects an unfused CPU
+# lowering (orders-of-magnitude pessimistic vs TPU); the dry-run instead
+# uses these explicit per-family traffic models, documented in
+# EXPERIMENTS.md §Roofline. All counts are per device per step.
+
+def _tree_bytes(spec_tree) -> int:
+    return sum(int(np.prod(l.shape)) * l.dtype.itemsize
+               for l in jax.tree.leaves(spec_tree))
+
+
+def _sharded_bytes(spec_tree, pspec_tree, mesh) -> int:
+    """Per-device bytes of a spec tree under its PartitionSpecs."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def leaf_bytes(spec, ps):
+        denom = 1
+        for entry in tuple(ps):
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            for a in axes:
+                denom *= sizes[a]
+        return int(np.prod(spec.shape)) * spec.dtype.itemsize // max(
+            denom, 1)
+
+    total = 0
+    flat_s = jax.tree.leaves(spec_tree)
+    flat_p = jax.tree.leaves(
+        pspec_tree, is_leaf=lambda x: isinstance(
+            x, jax.sharding.PartitionSpec))
+    for s, p in zip(flat_s, flat_p):
+        total += leaf_bytes(s, p)
+    return total
+
+
+import numpy as np  # noqa: E402 (used by traffic models)
+
+
+def lm_traffic_model(arch: "LMArch", mesh, shape_name: str) -> dict:
+    kind = arch.shapes[shape_name].kind
+    s = arch.shapes[shape_name].sizes
+    (state_sp, batch_sp), _ = arch.shardings(mesh, shape_name)
+    state = arch.state_specs(shape_name)
+    inputs = arch.input_specs(shape_name)
+    state_dev = _sharded_bytes(state, state_sp, mesh)
+    io_dev = _sharded_bytes(inputs, batch_sp, mesh)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = int(np.prod([v for k, v in sizes.items() if k != "model"]))
+    cfg = arch.cfg
+    if kind == "train":
+        params_dev = state_dev * 2 // 10  # bf16 params ≈ 2/10 of state
+        # fwd read + bwd read + write, grads r+w, adam m/v r+w (fp32)
+        weight_traffic = 5 * params_dev + 8 * (state_dev - params_dev) // 2
+        b_local = max(s["global_batch"] // dp, 1)
+        acts = 3 * cfg.n_layers * b_local * s["seq_len"] * cfg.d_model * 2
+        return dict(bytes=weight_traffic + acts + io_dev,
+                    state_bytes=state_dev, act_bytes=acts)
+    if kind == "prefill":
+        b_local = max(s["global_batch"] // dp, 1)
+        acts = cfg.n_layers * b_local * s["seq_len"] * cfg.d_model * 2
+        return dict(bytes=state_dev + acts + io_dev,
+                    state_bytes=state_dev, act_bytes=acts)
+    # decode: params read + cache read/write
+    cache_dev = io_dev  # cache dominates the batch tree
+    return dict(bytes=state_dev + 2 * cache_dev,
+                state_bytes=state_dev, act_bytes=0)
+
+
+def gnn_traffic_model(arch: "GNNArch", mesh, shape_name: str) -> dict:
+    s = arch.shapes[shape_name].sizes
+    (state_sp, batch_sp), _ = arch.shardings(mesh, shape_name)
+    state_dev = _sharded_bytes(arch.state_specs(shape_name), state_sp,
+                               mesh)
+    io_dev = _sharded_bytes(arch.input_specs(shape_name), batch_sp, mesh)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = int(np.prod([v for k, v in sizes.items() if k != "model"]))
+    cfg = arch.make_cfg(s["d_feat"], False)
+    d = getattr(cfg, "d_hidden", getattr(cfg, "channels", 64))
+    L = getattr(cfg, "n_layers", getattr(cfg, "n_blocks", 2))
+    e_local = max(s["n_edges"] // dp, 1)
+    # per layer: gather src feats, write messages, read for segment sum,
+    # write node out; x3 for fwd+bwd
+    edge_traffic = 3 * L * e_local * d * 4 * 4
+    node_traffic = 3 * L * s["n_nodes"] * d * 4 * 2   # replicated nodes
+    return dict(bytes=5 * state_dev + edge_traffic + node_traffic +
+                io_dev,
+                state_bytes=state_dev, act_bytes=edge_traffic)
+
+
+def recsys_traffic_model(arch: "RecsysArch", mesh, shape_name: str
+                         ) -> dict:
+    s = arch.shapes[shape_name].sizes
+    kind = arch.shapes[shape_name].kind
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = int(np.prod([v for k, v in sizes.items() if k != "model"]))
+    cfg = arch.cfg
+    (state_sp, batch_sp), _ = arch.shardings(mesh, shape_name)
+    state_dev = _sharded_bytes(arch.state_specs(shape_name), state_sp,
+                               mesh)
+    if kind == "recsys_retrieval":
+        c_local = max(s["n_candidates"] // dp, 1)
+        return dict(bytes=c_local * (cfg.embed_dim + 1) * 4,
+                    state_bytes=state_dev, act_bytes=0)
+    b_local = max(s["batch"] // dp, 1)
+    touched = b_local * cfg.n_fields * (cfg.embed_dim + 1) * 4
+    mult = 6 if kind == "recsys_train" else 1   # adam rows r/w
+    return dict(bytes=touched * mult, state_bytes=state_dev,
+                act_bytes=0)

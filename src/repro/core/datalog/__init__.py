@@ -1,0 +1,10 @@
+from repro.core.datalog.ast import (
+    Var, Const, Wildcard, Atom, Comparison, Aggregate, Rule, Program,
+)
+from repro.core.datalog.parser import parse_program, parse_rule
+from repro.core.datalog.stratify import stratify, Stratum
+
+__all__ = [
+    "Var", "Const", "Wildcard", "Atom", "Comparison", "Aggregate", "Rule",
+    "Program", "parse_program", "parse_rule", "stratify", "Stratum",
+]

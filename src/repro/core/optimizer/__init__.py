@@ -1,0 +1,3 @@
+from repro.core.optimizer.pipeline import CompileOptions, compile_program
+
+__all__ = ["CompileOptions", "compile_program"]

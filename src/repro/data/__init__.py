@@ -1,0 +1,4 @@
+from repro.data.synthetic import (
+    lm_batch_stream, random_graph, random_geometric_graph, recsys_stream,
+)
+from repro.data.sampler import NeighborSampler

@@ -1,0 +1,371 @@
+"""Semi-naive, stratum-by-stratum fixpoint engine (paper Sec. 2.2, 3).
+
+Two execution modes:
+
+* ``host``   — Python drives the iteration loop; each iteration is one
+  jitted, donated step function. Mirrors the per-iteration structure of
+  the paper's executor, surfaces per-iteration stats (delta sizes) and
+  allows capacity-overflow retry mid-stratum. Default for CPU runs.
+* ``device`` — the whole stratum fixpoint is a single
+  ``jax.lax.while_loop``; the TPU deployment path (no host syncs; the
+  paper's criticism of RecStep's cross-iteration synchronization applies
+  to host mode at scale). Used by tests to validate equivalence and by
+  the dry-run to lower the engine under a mesh.
+
+Both share one iteration body built from the optimized IR bundle.
+Capacity overflow (bounded join outputs; relation.py) raises a retry
+from the host with doubled capacities (``auto_grow``).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ir as I
+from repro.engine import relops as R
+from repro.engine.lower import Env, Evaluator, LowerConfig
+from repro.engine.relation import (
+    PAD, Relation, empty, from_numpy, live_mask, to_numpy,
+    to_numpy_with_val,
+)
+from repro.engine.semiring import (
+    COUNTING, PRESENCE, Semiring, monoid_for,
+)
+
+
+@dataclass
+class EngineConfig:
+    idb_cap: int = 1 << 14
+    idb_caps: dict = field(default_factory=dict)      # per-IDB override
+    intermediate_cap: int = 1 << 15
+    max_iters: int = 100_000
+    mode: str = "host"            # host | device
+    auto_grow: bool = True
+    max_grow_retries: int = 8
+    semiring: Semiring = PRESENCE  # execution algebra (Sec. 8)
+    jit: bool = True
+
+
+@dataclass
+class EngineStats:
+    iterations: dict = field(default_factory=dict)    # stratum -> n_iters
+    delta_sizes: dict = field(default_factory=dict)   # stratum -> [sizes]
+    wall_s: float = 0.0
+    grow_retries: int = 0
+    total_facts: dict = field(default_factory=dict)
+
+    @property
+    def total_iterations(self) -> int:
+        return sum(self.iterations.values())
+
+
+class OverflowError_(RuntimeError):
+    pass
+
+
+class Engine:
+    """Executes a CompiledProgram over EDB data."""
+
+    def __init__(self, compiled: I.CompiledProgram,
+                 config: EngineConfig | None = None):
+        self.compiled = compiled
+        self.cfg = config or EngineConfig()
+        self.monoid: dict[str, tuple[Semiring, int]] = {}
+        for name, (func, vpos) in compiled.monoid_idbs.items():
+            self.monoid[name] = (monoid_for(func), vpos)
+
+    # -- helpers -------------------------------------------------------------
+    def _idb_cap(self, name: str) -> int:
+        return int(self.cfg.idb_caps.get(name, self.cfg.idb_cap))
+
+    def _sr_of(self, name: str) -> Semiring:
+        if name in self.monoid:
+            return self.monoid[name][0]
+        return self.cfg.semiring
+
+    def _stored_arity(self, name: str) -> int:
+        a = self.compiled.arities[name]
+        if name in self.monoid:
+            a -= 1
+        return max(a, 1)
+
+    def _empty_idb(self, name: str) -> Relation:
+        sr = self._sr_of(name)
+        return empty(self._idb_cap(name), self._stored_arity(name),
+                     sr.identity if sr.has_value else None)
+
+    def _split_monoid(self, name: str, rel: Relation) -> Relation:
+        """Derived plan outputs carry the lattice value as a data column;
+        split it into the val payload (Sec. 9)."""
+        if name not in self.monoid:
+            return rel
+        sr, vpos = self.monoid[name]
+        data_cols = [c for c in range(rel.arity) if c != vpos]
+        data = rel.data[:, jnp.array(data_cols)]
+        val = jnp.where(live_mask(rel), rel.data[:, vpos], sr.identity)
+        return Relation(data, val.astype(jnp.int32), rel.n)
+
+    # -- plan evaluation ------------------------------------------------------
+    def _eval_plans(self, plans, env: Env, ev: Evaluator):
+        """Evaluate plans, concat per head IDB -> derived relations."""
+        by_head: dict[str, list[Relation]] = {}
+        for p in plans:
+            rel = ev.eval(p.root, env)
+            rel = self._split_monoid(p.head, rel)
+            by_head.setdefault(p.head, []).append(rel)
+        out: dict[str, Relation] = {}
+        for head, rels in by_head.items():
+            sr = self._sr_of(head)
+            cap = self._idb_cap(head)
+            if len(rels) == 1:
+                merged, ov = R.dedupe(
+                    rels[0].data, rels[0].val, sr, cap)
+            else:
+                merged, ov = R.concat_all(rels, sr, cap)
+            env.overflow = env.overflow | ov
+            out[head] = merged
+        return out
+
+    def export_monoid(self, name: str, rel: Relation) -> np.ndarray:
+        """Re-attach a monoid IDB's lattice value as a column."""
+        data, val = to_numpy_with_val(rel)
+        _, vpos = self.monoid[name]
+        cols = []
+        di = 0
+        for c in range(self.compiled.arities[name]):
+            if c == vpos:
+                cols.append(val)
+            else:
+                cols.append(data[:, di])
+                di += 1
+        return np.stack(cols, axis=1) if cols else data
+
+    # -- stratum execution ----------------------------------------------------
+    def _run_stratum(self, sp: I.StratumPlan, env_rels, stats,
+                     stratum_key, init_state=None):
+        base_env_rels = env_rels
+        cfg = self.cfg
+        lcfg = LowerConfig(cfg.intermediate_cap, cfg.semiring)
+        ev = Evaluator(lcfg)
+        monoid_names = set(self.monoid)
+
+        idbs = sorted(sp.idbs)
+        # ground facts
+        init_rels: dict[str, Relation] = {}
+        for name in idbs:
+            facts = sp.facts.get(name, [])
+            sr = self._sr_of(name)
+            if facts:
+                arr = np.array(facts, dtype=np.int64)
+                if name in self.monoid:
+                    _, vpos = self.monoid[name]
+                    vals = arr[:, vpos]
+                    dcols = [c for c in range(arr.shape[1]) if c != vpos]
+                    arr = arr[:, dcols] if dcols else np.zeros(
+                        (len(vals), 1), np.int64)
+                    init_rels[name] = from_numpy(
+                        arr, self._idb_cap(name), val=vals,
+                        val_identity=sr.identity, dedupe=False)
+                else:
+                    if arr.shape[1] == 0:
+                        arr = np.zeros((arr.shape[0], 1), np.int64)
+                    init_rels[name] = from_numpy(arr, self._idb_cap(name))
+            else:
+                init_rels[name] = self._empty_idb(name)
+
+        nonrec = [p for p in sp.plans if p.variant == -1]
+        rec = [p for p in sp.plans if p.variant >= 0]
+
+        # -- init: facts + nonrecursive rules once
+        def init_fn(rels):
+            env = Env(dict(rels), self.compiled.shared, monoid_names)
+            derived = self._eval_plans(nonrec, env, ev)
+            state = {}
+            for name in idbs:
+                full0 = init_rels[name]
+                if name in derived:
+                    sr = self._sr_of(name)
+                    full0, delta0, ov = R.merge_with_delta(
+                        full0, derived[name], sr, self._idb_cap(name))
+                    env.overflow = env.overflow | ov
+                else:
+                    delta0 = full0
+                state[name] = (full0, delta0)
+            return state, env.overflow
+
+        if init_state is not None:
+            # incremental continuation: merge seed deltas into given fulls
+            def seed_fn(given):
+                state = {}
+                ovf = jnp.zeros((), bool)
+                for name in idbs:
+                    full, seed = given[name]
+                    sr = self._sr_of(name)
+                    if seed is None:
+                        state[name] = (full, self._empty_idb(name))
+                    else:
+                        nf, nd, ov = R.merge_with_delta(
+                            full, seed, sr, self._idb_cap(name))
+                        ovf |= ov
+                        state[name] = (nf, nd)
+                return state, ovf
+            state, ovf = seed_fn(init_state)
+        else:
+            init_jit = jax.jit(init_fn) if cfg.jit else init_fn
+            state, ovf = init_jit(dict(base_env_rels))
+        if bool(ovf):
+            raise OverflowError_(f"overflow during init of {stratum_key}")
+
+        if not sp.recursive or not rec:
+            full_env = dict(base_env_rels)
+            for name in idbs:
+                full_env[(name, I.FULL)] = state[name][0]
+            stats.iterations[stratum_key] = 0
+            return full_env
+
+        # -- one semi-naive iteration
+        def iter_fn(state, base):
+            env_rels = dict(base)
+            ovf = jnp.zeros((), bool)
+            for name in idbs:
+                full, delta = state[name]
+                sr = self._sr_of(name)
+                full_new, ov = R.merge(full, delta, sr, self._idb_cap(name))
+                ovf |= ov
+                env_rels[(name, I.FULL)] = full
+                env_rels[(name, I.FULL_OLD)] = full
+                env_rels[(name, I.DELTA)] = delta
+                env_rels[(name, I.FULL_NEW)] = full_new
+            env = Env(env_rels, self.compiled.shared, monoid_names)
+            derived = self._eval_plans(rec, env, ev)
+            new_state = {}
+            for name in idbs:
+                sr = self._sr_of(name)
+                full_new = env_rels[(name, I.FULL_NEW)]
+                if name in derived:
+                    nf, nd, ov = R.merge_with_delta(
+                        full_new, derived[name], sr, self._idb_cap(name))
+                    ovf |= ov
+                else:
+                    nf = full_new
+                    nd = self._empty_idb(name)
+                new_state[name] = (nf, nd)
+            any_delta = jnp.stack(
+                [new_state[n][1].n > 0 for n in idbs]).any()
+            return new_state, any_delta, ovf | env.overflow
+
+        stratum_iters = 0
+        delta_log = []
+        if cfg.mode == "device":
+            def cond(carry):
+                state, any_delta, ovf, it = carry
+                return any_delta & (it < cfg.max_iters) & (~ovf)
+
+            def body(carry):
+                state, _, ovf, it = carry
+                ns, nd, ov = iter_fn(state, base_env_rels)
+                return ns, nd, ovf | ov, it + 1
+
+            carry = (state, jnp.array(True), jnp.zeros((), bool),
+                     jnp.zeros((), jnp.int32))
+            run = lambda c: jax.lax.while_loop(cond, body, c)
+            if cfg.jit:
+                run = jax.jit(run)
+            state, _, ovf, iters = run(carry)
+            if bool(ovf):
+                raise OverflowError_(f"overflow in stratum {stratum_key}")
+            stratum_iters = int(iters)
+        else:
+            step = jax.jit(iter_fn) if cfg.jit else iter_fn
+            while True:
+                sizes = {n: int(state[n][1].n) for n in idbs}
+                if all(v == 0 for v in sizes.values()):
+                    break
+                delta_log.append(sum(sizes.values()))
+                state, any_delta, ovf = step(state, base_env_rels)
+                if bool(ovf):
+                    raise OverflowError_(
+                        f"overflow in stratum {stratum_key} "
+                        f"iter {stratum_iters}")
+                stratum_iters += 1
+                if stratum_iters >= cfg.max_iters:
+                    raise RuntimeError(
+                        f"no fixpoint after {cfg.max_iters} iterations")
+
+        # final merge (loop exits with delta possibly nonempty in device
+        # mode only at max_iters; normally a no-op)
+        full_env = dict(base_env_rels)
+        for name in idbs:
+            full, delta = state[name]
+            sr = self._sr_of(name)
+            merged, ov = R.merge(full, delta, sr, self._idb_cap(name))
+            if bool(ov):
+                raise OverflowError_(f"overflow finalizing {name}")
+            full_env[(name, I.FULL)] = merged
+        stats.iterations[stratum_key] = stratum_iters
+        stats.delta_sizes[stratum_key] = delta_log
+        return full_env
+
+    # -- public ---------------------------------------------------------------
+    def run(self, edbs: dict[str, np.ndarray],
+            edb_caps: Optional[dict] = None) -> tuple[dict, EngineStats]:
+        """Evaluate the program. Returns ({relation: np.ndarray}, stats).
+        Monoid IDBs come back with the value re-attached as a column."""
+        attempt = 0
+        while True:
+            try:
+                return self._run_once(edbs, edb_caps)
+            except OverflowError_:
+                attempt += 1
+                if not self.cfg.auto_grow or (
+                        attempt > self.cfg.max_grow_retries):
+                    raise
+                self.cfg.intermediate_cap *= 2
+                self.cfg.idb_cap *= 2
+                self.cfg.idb_caps = {
+                    k: v * 2 for k, v in self.cfg.idb_caps.items()}
+
+    def _run_once(self, edbs, edb_caps):
+        t0 = time.perf_counter()
+        stats = EngineStats()
+        env_rels: dict[tuple[str, str], Relation] = {}
+        for name in self.compiled.edbs:
+            arity = max(self.compiled.arities.get(name, 1), 1)
+            data = np.asarray(edbs.get(name, np.zeros((0, arity))))
+            if data.ndim == 1:
+                data = data[:, None]
+            if data.shape[1] == 0:
+                data = np.zeros((data.shape[0], 1), np.int64)
+            if data.shape[1] != arity:
+                raise ValueError(
+                    f"EDB {name}: expected arity {arity}, "
+                    f"got {data.shape[1]}")
+            cap = (edb_caps or {}).get(
+                name, max(16, int(2 ** np.ceil(np.log2(max(
+                    data.shape[0], 1) + 1)))))
+            env_rels[(name, I.FULL)] = from_numpy(data, cap)
+
+        for sp in self.compiled.strata:
+            env_rels = self._run_stratum(
+                sp, env_rels, stats, f"s{sp.index}")
+
+        out: dict[str, np.ndarray] = {}
+        for name in self.compiled.arities:
+            key = (name, I.FULL)
+            if key not in env_rels:
+                continue
+            rel = env_rels[key]
+            if name in self.monoid:
+                out[name] = self.export_monoid(name, rel)
+            else:
+                out[name] = to_numpy(rel)
+            stats.total_facts[name] = out[name].shape[0]
+        stats.wall_s = time.perf_counter() - t0
+        self.last_env = env_rels
+        return out, stats

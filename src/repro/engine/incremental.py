@@ -1,0 +1,401 @@
+"""Incremental Datalog maintenance (paper Sec. 9 'Algebraic Semantics').
+
+FlowLog supports both batch and incremental execution from the same IR.
+This module maintains materialized IDBs under EDB insertions/deletions:
+
+* **Stratum pruning** — only strata downstream of a changed relation are
+  touched (dependency closure over the stratified program).
+* **Insertions** — seeded semi-naive continuation: every derivation using
+  at least one inserted tuple is produced by re-evaluating each rule with
+  one changed-relation occurrence retagged to scan only the inserted rows
+  (``retag_scans``); the resulting seed delta then drives the normal
+  semi-naive loop from the existing fixpoint. Sound and complete for set
+  semantics (duplicated derivations collapse under presence diffs).
+* **Deletions** — delete/re-derive (DRed, simplified): over-approximate
+  deletable facts with the same seed trick against the *old* state,
+  remove them, then re-derive survivors by running the stratum's
+  semi-naive loop restricted to the candidate set, and continue to
+  fixpoint. Monoid (MIN/MAX) IDBs fall back to stratum recompute on
+  deletion — lattice values cannot be 'un-improved' without support
+  counting (documented limitation; matches DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ir as I
+from repro.engine import relops as R
+from repro.engine.engine import Engine, EngineConfig, EngineStats
+from repro.engine.lower import Env, Evaluator, LowerConfig
+from repro.engine.relation import Relation, from_numpy, to_numpy
+from repro.engine.semiring import PRESENCE
+
+CHANGED = "changed"
+
+
+def _unique_rules(plans: list[I.RulePlan]) -> list[I.RulePlan]:
+    """One representative plan per source rule (variants collapse)."""
+    seen: set[tuple[str, str]] = set()
+    out = []
+    for p in plans:
+        key = (p.head, p.source)
+        if key not in seen:
+            seen.add(key)
+            out.append(p)
+    return out
+
+
+def _retag_all_full(root: I.IR) -> I.IR:
+    return I.retag_scans(root, lambda rel, idx: I.FULL)
+
+
+def _count_occurrences(root: I.IR, rel: str) -> int:
+    return sum(1 for n in I.iter_nodes(root)
+               if isinstance(n, I.Scan) and n.rel == rel)
+
+
+def _retag_one_changed(root: I.IR, rel: str, occ: int) -> I.IR:
+    def version_of(r, idx):
+        if r == rel and idx == occ:
+            return CHANGED
+        return I.FULL
+    return I.retag_scans(root, version_of)
+
+
+class IncrementalEngine:
+    """Materialized-view maintenance over a CompiledProgram."""
+
+    def __init__(self, compiled: I.CompiledProgram,
+                 config: EngineConfig | None = None):
+        self.compiled = compiled
+        self.engine = Engine(compiled, config)
+        self.edbs: dict[str, set[tuple]] = {}
+        self._env: dict[tuple[str, str], Relation] = {}
+        self._stats = EngineStats()
+        # relation -> strata indexes that (transitively) depend on it
+        self._downstream = self._dependency_closure()
+
+    # -- dependency analysis --------------------------------------------------
+    def _dependency_closure(self) -> dict[str, set[int]]:
+        produces: dict[int, set[str]] = {}
+        consumes: dict[int, set[str]] = {}
+        for sp in self.compiled.strata:
+            produces[sp.index] = set(sp.idbs)
+            cons = set()
+            for p in sp.plans:
+                for n in I.iter_nodes(p.root):
+                    if isinstance(n, I.Scan):
+                        cons.add(n.rel)
+                for n in self._shared_scans(p.root):
+                    cons.add(n)
+            consumes[sp.index] = cons
+        self._consumes = consumes
+        downstream: dict[str, set[int]] = {}
+
+        def affected(rels: set[str]) -> set[int]:
+            hit: set[int] = set()
+            live = set(rels)
+            for sp in self.compiled.strata:
+                if consumes[sp.index] & live:
+                    hit.add(sp.index)
+                    live |= produces[sp.index]
+            return hit
+
+        for name in set(self.compiled.arities):
+            downstream[name] = affected({name})
+        return downstream
+
+    def _shared_scans(self, root: I.IR) -> set[str]:
+        out: set[str] = set()
+        for n in I.iter_nodes(root):
+            if isinstance(n, I.SharedRef):
+                sub = self.compiled.shared[n.ref]
+                for m in I.iter_nodes(sub):
+                    if isinstance(m, I.Scan):
+                        out.add(m.rel)
+                out |= self._shared_scans(sub)
+        return out
+
+    # -- public ----------------------------------------------------------------
+    def initialize(self, edbs: dict[str, np.ndarray]) -> dict[str, np.ndarray]:
+        self.edbs = {
+            k: set(map(tuple, np.asarray(v).reshape(len(v), -1)))
+            for k, v in edbs.items()}
+        out, stats = self.engine.run(edbs)
+        self._env = self.engine.last_env
+        self._stats = stats
+        return out
+
+    def apply(self, inserts: Optional[dict[str, np.ndarray]] = None,
+              deletes: Optional[dict[str, np.ndarray]] = None
+              ) -> dict[str, np.ndarray]:
+        inserts = inserts or {}
+        deletes = deletes or {}
+        changed = set(inserts) | set(deletes)
+        for name in changed:
+            if name not in self.compiled.edbs:
+                raise ValueError(f"{name} is not an EDB")
+
+        # apply to base EDB sets
+        real_ins: dict[str, np.ndarray] = {}
+        real_del: dict[str, np.ndarray] = {}
+        for name, rows in inserts.items():
+            rows = [tuple(r) for r in np.asarray(rows).reshape(len(rows), -1)]
+            new = [r for r in rows if r not in self.edbs.setdefault(
+                name, set())]
+            self.edbs[name] |= set(new)
+            if new:
+                real_ins[name] = np.array(sorted(set(new)))
+        for name, rows in deletes.items():
+            rows = [tuple(r) for r in np.asarray(rows).reshape(len(rows), -1)]
+            old = [r for r in rows if r in self.edbs.get(name, set())]
+            self.edbs[name] -= set(old)
+            if old:
+                real_del[name] = np.array(sorted(set(old)))
+        changed = set(real_ins) | set(real_del)
+        if not changed:
+            return self.snapshot()
+
+        affected: set[int] = set()
+        for name in changed:
+            affected |= self._downstream.get(name, set())
+
+        # refresh EDB relations in env
+        for name in changed:
+            rows = np.array(sorted(self.edbs[name])) if self.edbs[name] else (
+                np.zeros((0, max(self.compiled.arities[name], 1))))
+            cap = max(16, int(2 ** np.ceil(np.log2(len(rows) + 1))))
+            self._env[(name, I.FULL)] = from_numpy(rows, cap)
+
+        # change sets grow as strata update (IDB-level diffs feed downstream)
+        ins_changes: dict[str, np.ndarray] = dict(real_ins)
+        del_changes: dict[str, np.ndarray] = dict(real_del)
+        for sp in self.compiled.strata:
+            if sp.index not in affected:
+                continue
+            consumed = self._consumes[sp.index]
+            my_ins = {k: v for k, v in ins_changes.items() if k in consumed}
+            my_del = {k: v for k, v in del_changes.items() if k in consumed}
+            if not my_ins and not my_del:
+                continue
+            old_snap = {n: self._snapshot_idb(n) for n in sp.idbs}
+            monoid_hit = any(n in self.compiled.monoid_idbs for n in sp.idbs)
+            # stratified aggregates (Reduce) are order-sensitive in their
+            # inputs: seeds over changed subsets would aggregate partial
+            # groups. Non-recursive agg strata are one pass — recompute.
+            # Exception: a Reduce feeding a MIN/MAX monoid IDB is seed-safe
+            # (a partial-subset MIN monoid-merges to the true MIN).
+            agg_hit = any(
+                isinstance(n, I.Reduce)
+                for p in sp.plans
+                if p.head not in self.compiled.monoid_idbs
+                for n in I.iter_nodes(p.root))
+            if agg_hit or (my_del and monoid_hit):
+                self._recompute_stratum(sp)
+            elif my_del:
+                self._dred_stratum(sp, my_ins, my_del)
+            else:
+                self._insert_stratum(sp, my_ins)
+            # IDB-level diffs for downstream strata
+            for n in sp.idbs:
+                new_snap = self._snapshot_idb(n)
+                old_set = set(map(tuple, old_snap[n]))
+                new_set = set(map(tuple, new_snap))
+                added = sorted(new_set - old_set)
+                removed = sorted(old_set - new_set)
+                if added:
+                    ins_changes[n] = np.array(added)
+                if removed:
+                    del_changes[n] = np.array(removed)
+        return self.snapshot()
+
+    def _snapshot_idb(self, name: str) -> np.ndarray:
+        rel = self._env.get((name, I.FULL))
+        if rel is None:
+            return np.zeros((0, max(self.compiled.arities[name], 1)))
+        if name in self.engine.monoid:
+            return self.engine.export_monoid(name, rel)
+        return to_numpy(rel)
+
+    def _rel_from_rows(self, name: str, rows: np.ndarray) -> Relation:
+        """Rows (with monoid value column re-attached, if any) -> Relation
+        in stored layout."""
+        rows = np.asarray(rows).reshape(len(rows), -1)
+        cap = max(16, int(2 ** np.ceil(np.log2(len(rows) + 1))))
+        if name in self.engine.monoid:
+            sr, vpos = self.engine.monoid[name]
+            vals = rows[:, vpos]
+            dcols = [c for c in range(rows.shape[1]) if c != vpos]
+            data = rows[:, dcols] if dcols else np.zeros(
+                (len(vals), 1), np.int64)
+            return from_numpy(data, cap, val=vals, val_identity=sr.identity,
+                              dedupe=False)
+        return from_numpy(rows, cap)
+
+    def snapshot(self) -> dict[str, np.ndarray]:
+        out = {}
+        for name in self.compiled.arities:
+            key = (name, I.FULL)
+            if key in self._env:
+                rel = self._env[key]
+                if name in self.engine.monoid:
+                    out[name] = self.engine.export_monoid(name, rel)
+                else:
+                    out[name] = to_numpy(rel)
+        return out
+
+    # -- internals --------------------------------------------------------------
+    def _recompute_stratum(self, sp: I.StratumPlan) -> None:
+        stats = EngineStats()
+        env = {k: v for k, v in self._env.items()
+               if k[0] not in sp.idbs}
+        self._env = self.engine._run_stratum(env_rels=env, sp=sp,
+                                             stats=stats,
+                                             stratum_key=f"inc_s{sp.index}")
+
+    def _seed(self, sp: I.StratumPlan, changed_rows: dict[str, Relation],
+              env_rels) -> dict[str, Relation]:
+        """Evaluate every rule with one changed-occurrence scan; union by
+        head. Changed IDB inputs from lower strata are handled by passing
+        their full (already updated) relations — the seed only needs the
+        changed EDB occurrences because lower strata were updated first
+        and their deltas folded into CHANGED entries."""
+        lcfg = LowerConfig(self.engine.cfg.intermediate_cap,
+                           self.engine.cfg.semiring)
+        ev = Evaluator(lcfg)
+        rels = dict(env_rels)
+        for name, rel in changed_rows.items():
+            rels[(name, CHANGED)] = rel
+        env = Env(rels, self.compiled.shared, set(self.engine.monoid))
+        derived: dict[str, list[Relation]] = {}
+        for p in _unique_rules(sp.plans):
+            plain = _retag_all_full(p.root)
+            for rel_name in changed_rows:
+                occs = _count_occurrences(plain, rel_name)
+                for occ in range(occs):
+                    root = _retag_one_changed(plain, rel_name, occ)
+                    out = ev.eval(root, env)
+                    out = self.engine._split_monoid(p.head, out)
+                    derived.setdefault(p.head, []).append(out)
+        seeds: dict[str, Relation] = {}
+        for head, rels_ in derived.items():
+            sr = self.engine._sr_of(head)
+            merged, ov = R.concat_all(
+                rels_, sr, self.engine._idb_cap(head))
+            seeds[head] = merged
+        return seeds
+
+    def _insert_stratum(self, sp: I.StratumPlan,
+                        inserts: dict[str, np.ndarray]) -> None:
+        changed_rel = {name: self._rel_from_rows(name, rows)
+                       for name, rows in inserts.items()}
+        seeds = self._seed(sp, changed_rel, self._env)
+        self._continue_fixpoint(sp, seeds)
+
+    def _dred_stratum(self, sp, inserts, deletes) -> None:
+        # 1. over-delete to FIXPOINT: candidates derivable from deleted
+        #    tuples against the OLD state, propagated through stratum IDB
+        #    occurrences until no new candidates (classic DRed phase 1).
+        #    The env still holds old IDB fulls; changed EDB fulls are
+        #    already new, so reconstruct the old EDB view for the seeds.
+        del_rel = {name: self._rel_from_rows(name, rows)
+                   for name, rows in deletes.items()}
+        old_env = dict(self._env)
+        for name, rows in deletes.items():
+            # old view = new ∪ deleted (works for EDBs and lower IDBs)
+            if name in self.engine.monoid:
+                cur = self.engine.export_monoid(
+                    name, self._env[(name, I.FULL)])
+            else:
+                cur = to_numpy(self._env[(name, I.FULL)])
+            allrows = np.concatenate([cur, rows]) if len(cur) else rows
+            old_env[(name, I.FULL)] = self._rel_from_rows(name, allrows)
+
+        candidates: dict[str, set[tuple]] = {n: set() for n in sp.idbs}
+        frontier = del_rel
+        while frontier:
+            step = self._seed(sp, frontier, old_env)
+            frontier = {}
+            for head, rel in step.items():
+                rows = set(map(tuple, to_numpy(rel)))
+                # only facts that actually exist can be deleted
+                exists = set(map(tuple, to_numpy(
+                    self._env[(head, I.FULL)])))
+                new = (rows & exists) - candidates[head]
+                if new:
+                    candidates[head] |= new
+                    frontier[head] = self._rel_from_rows(
+                        head, np.array(sorted(new)))
+
+        candidates = {
+            name: self._rel_from_rows(name, np.array(sorted(rows)))
+            for name, rows in candidates.items() if rows}
+
+        # 2. remove candidates from stored fulls
+        for name, cand in candidates.items():
+            full = self._env[(name, I.FULL)]
+            reduced, _ = R.difference(full, cand)
+            self._env[(name, I.FULL)] = reduced
+
+        # 3. re-derive: run rules against the reduced state; anything still
+        #    derivable (incl. candidates with alternate support) comes back
+        #    through the standard fixpoint continuation.
+        rederive: dict[str, Relation] = {}
+        lcfg = LowerConfig(self.engine.cfg.intermediate_cap,
+                           self.engine.cfg.semiring)
+        ev = Evaluator(lcfg)
+        env = Env(dict(self._env), self.compiled.shared,
+                  set(self.engine.monoid))
+        for p in _unique_rules(sp.plans):
+            plain = _retag_all_full(p.root)
+            out = ev.eval(plain, env)
+            out = self.engine._split_monoid(p.head, out)
+            sr = self.engine._sr_of(p.head)
+            cand = candidates.get(p.head)
+            if cand is not None:
+                out, _ = R.semijoin(
+                    out, cand, tuple(range(out.arity)),
+                    tuple(range(cand.arity)))
+            if p.head in rederive:
+                merged, _ = R.concat_all(
+                    [rederive[p.head], out], sr,
+                    self.engine._idb_cap(p.head))
+                rederive[p.head] = merged
+            else:
+                rederive[p.head] = out
+        # 4. insertions seeded on the post-deletion state
+        if inserts:
+            ins_rel = {name: self._rel_from_rows(name, rows)
+                       for name, rows in inserts.items()}
+            ins_seeds = self._seed(sp, ins_rel, self._env)
+            for head, rel in ins_seeds.items():
+                if head in rederive:
+                    sr = self.engine._sr_of(head)
+                    rederive[head], _ = R.concat_all(
+                        [rederive[head], rel], sr,
+                        self.engine._idb_cap(head))
+                else:
+                    rederive[head] = rel
+        self._continue_fixpoint(sp, rederive)
+
+    def _continue_fixpoint(self, sp: I.StratumPlan,
+                           seeds: dict[str, Relation]) -> None:
+        """Merge seeds into fulls, then run the stratum's semi-naive loop
+        from (full, seed-delta) to fixpoint."""
+        stats = EngineStats()
+        env = dict(self._env)
+        self._env = self.engine._run_stratum(
+            sp=sp, env_rels={k: v for k, v in env.items()
+                             if k[0] not in sp.idbs},
+            stats=stats, stratum_key=f"inc_s{sp.index}",
+            init_state={
+                name: (env.get((name, I.FULL),
+                               self.engine._empty_idb(name)),
+                       seeds.get(name))
+                for name in sorted(sp.idbs)})
+        self._stats.iterations[f"inc_s{sp.index}"] = (
+            stats.iterations.get(f"inc_s{sp.index}", 0))

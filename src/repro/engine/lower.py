@@ -1,0 +1,276 @@
+"""IR -> JAX dataflow (the executor's render step, paper Fig. 1).
+
+``eval_ir`` walks an optimized IR and emits shape-static JAX ops over
+``Relation`` structs. SharedRefs are memoized per evaluation pass — the
+executor-level realization of shared arrangements / CTE reuse (Sec. 7).
+
+Scans resolve through an environment mapping (relation, version) to the
+current Relation; monoid IDBs (Sec. 9) expose their lattice value as a
+trailing data column.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ir as I
+from repro.engine import relops as R
+from repro.engine.relation import PAD, Relation, live_mask
+from repro.engine.semiring import PRESENCE, Semiring
+
+
+@dataclass
+class LowerConfig:
+    intermediate_cap: int = 1 << 15
+    # execution algebra for row diffs: PRESENCE (batch) or COUNTING
+    semiring: Semiring = PRESENCE
+
+
+class Env:
+    """(relation name, version) -> Relation, plus shared-subplan memo."""
+
+    def __init__(self, rels: dict[tuple[str, str], Relation],
+                 shared: dict[str, I.IR], monoid_arity_extended: set[str]):
+        self.rels = rels
+        self.shared = shared
+        self.monoid = monoid_arity_extended
+        self.memo: dict[str, tuple[Relation, jax.Array]] = {}
+        self.overflow = jnp.zeros((), bool)
+
+    def scan(self, name: str, version: str) -> Relation:
+        key = (name, version)
+        if key not in self.rels:
+            # non-stratum relations only exist at FULL
+            key = (name, I.FULL)
+        rel = self.rels[key]
+        if name in self.monoid and rel.val is not None:
+            return Relation(R.as_columns(rel), None, rel.n)
+        return rel
+
+
+def _schema_cols(schema) -> dict[str, int]:
+    out = {}
+    for i, c in enumerate(schema):
+        if isinstance(c, str):
+            out.setdefault(c, i)
+        elif isinstance(c, I.Expr) and c.name:
+            out.setdefault(c.name, i)
+    return out
+
+
+def _eval_ref(ref, data: jax.Array, cols: dict[str, int]):
+    """Evaluate a ColumnRef against loose rows [n, width]."""
+    if isinstance(ref, int):
+        return jnp.full((data.shape[0],), ref, jnp.int32)
+    if isinstance(ref, I.Expr):
+        l = _eval_ref(ref.lhs, data, cols)
+        r = _eval_ref(ref.rhs, data, cols)
+        if ref.op == "+":
+            return l + r
+        if ref.op == "-":
+            return l - r
+        if ref.op == "*":
+            return l * r
+        raise ValueError(ref.op)
+    return data[:, cols[ref]]
+
+
+_COMP = {
+    "=": lambda a, b: a == b,
+    "!=": lambda a, b: a != b,
+    "<": lambda a, b: a < b,
+    "<=": lambda a, b: a <= b,
+    ">": lambda a, b: a > b,
+    ">=": lambda a, b: a >= b,
+}
+
+
+def _comp_mask(comparisons, data, cols):
+    mask = jnp.ones((data.shape[0],), bool)
+    for c in comparisons:
+        mask &= _COMP[c.op](_eval_ref(c.lhs, data, cols),
+                            _eval_ref(c.rhs, data, cols))
+    return mask
+
+
+def _project(schema, data, cols):
+    if not schema:
+        return jnp.zeros((data.shape[0], 0), jnp.int32)
+    return jnp.stack(
+        [_eval_ref(c, data, cols) for c in schema], axis=1).astype(jnp.int32)
+
+
+class Evaluator:
+    def __init__(self, cfg: LowerConfig):
+        self.cfg = cfg
+
+    # -- public -------------------------------------------------------------
+    def eval(self, node: I.IR, env: Env) -> Relation:
+        rel, ovf = self._eval(node, env)
+        env.overflow = env.overflow | ovf
+        return rel
+
+    # -- dispatch -----------------------------------------------------------
+    def _eval(self, node: I.IR, env: Env):
+        meth = getattr(self, f"_eval_{type(node).__name__.lower()}")
+        return meth(node, env)
+
+    def _eval_scan(self, node: I.Scan, env: Env):
+        return env.scan(node.rel, node.version), jnp.zeros((), bool)
+
+    def _eval_sharedref(self, node: I.SharedRef, env: Env):
+        if node.ref not in env.memo:
+            sub = env.shared[node.ref]
+            rel, ovf = self._eval(sub, env)
+            env.memo[node.ref] = (rel, ovf)
+        rel, ovf = env.memo[node.ref]
+        return rel, ovf
+
+    def _eval_map(self, node: I.Map, env: Env):
+        return self._map_like(node.child, node.schema, (), env)
+
+    def _eval_flatmap(self, node: I.FlatMap, env: Env):
+        return self._map_like(node.child, node.schema, node.comparisons, env)
+
+    def _eval_filter(self, node: I.Filter, env: Env):
+        child, ovf = self._eval(node.child, env)
+        cols = _schema_cols(node.child.schema)
+        mask = _comp_mask(node.comparisons, child.data, cols) & (
+            live_mask(child))
+        d, v, n, ov2 = R._scatter_compact(
+            child.data, child.val, mask, child.capacity, 0)
+        return Relation(d, v if child.val is not None else None, n), ovf | ov2
+
+    def _map_like(self, child_ir, schema, comparisons, env):
+        child, ovf = self._eval(child_ir, env)
+        cols = _schema_cols(child_ir.schema)
+        mask = _comp_mask(comparisons, child.data, cols) & live_mask(child)
+        data = _project(schema, child.data, cols)
+        data = jnp.where(mask[:, None], data, PAD)
+        out, ov2 = R.dedupe(data, child.val, self.cfg.semiring,
+                            child.capacity)
+        return out, ovf | ov2
+
+    def _eval_join(self, node: I.Join, env: Env):
+        data, val, valid, ovf = self._loose_join(node, env, node.schema, ())
+        out, ov2 = R.dedupe(data, val, self.cfg.semiring, self._join_cap())
+        return out, ovf | ov2
+
+    def _eval_joinflatmap(self, node: I.JoinFlatMap, env: Env):
+        data, val, valid, ovf = self._loose_join(
+            node, env, node.schema, node.comparisons)
+        out, ov2 = R.dedupe(data, val, self.cfg.semiring, self._join_cap())
+        return out, ovf | ov2
+
+    def _join_cap(self) -> int:
+        return self.cfg.intermediate_cap
+
+    def _loose_join(self, node, env, out_schema, comparisons):
+        left, ovl = self._eval(node.left, env)
+        right, ovr = self._eval(node.right, env)
+        lcols = _schema_cols(node.left.schema)
+        rcols = _schema_cols(node.right.schema)
+        l_keys = tuple(lcols[k] for k in node.keys)
+        r_keys = tuple(rcols[k] for k in node.keys)
+        l_out = tuple(range(left.arity))
+        r_out = tuple(i for i in range(right.arity)
+                      if i not in set(r_keys))
+        data, val, valid, total, ovj = R.join(
+            left, right, l_keys, r_keys, l_out, r_out,
+            self.cfg.semiring, self._join_cap())
+        # joined loose schema: left schema ++ right schema minus key dups
+        joined_names: dict[str, int] = {}
+        w = 0
+        for c in node.left.schema:
+            if isinstance(c, str):
+                joined_names.setdefault(c, w)
+            elif isinstance(c, I.Expr) and c.name:
+                joined_names.setdefault(c.name, w)
+            w += 1
+        for i, c in enumerate(node.right.schema):
+            if i in set(r_keys):
+                continue
+            if isinstance(c, str):
+                joined_names.setdefault(c, w)
+            elif isinstance(c, I.Expr) and c.name:
+                joined_names.setdefault(c.name, w)
+            w += 1
+        mask = _comp_mask(comparisons, data, joined_names) & valid
+        out_data = _project(out_schema, data, joined_names)
+        out_data = jnp.where(mask[:, None], out_data, PAD)
+        out_val = val
+        if val is not None:
+            out_val = jnp.where(mask, val, self.cfg.semiring.identity)
+        return out_data, out_val, mask, ovl | ovr | ovj
+
+    def _eval_semijoin(self, node: I.Semijoin, env: Env):
+        left, ovl = self._eval(node.left, env)
+        right, ovr = self._eval(node.right, env)
+        lcols = _schema_cols(node.left.schema)
+        rcols = _schema_cols(node.right.schema)
+        l_keys = tuple(lcols[k] for k in node.keys)
+        r_keys = tuple(rcols[k] for k in node.keys)
+        out, ov = R.semijoin(left, right, l_keys, r_keys,
+                             left.capacity, self.cfg.semiring)
+        return out, ovl | ovr | ov
+
+    def _eval_antijoin(self, node: I.Antijoin, env: Env):
+        left, ovl = self._eval(node.left, env)
+        right, ovr = self._eval(node.right, env)
+        lcols = _schema_cols(node.left.schema)
+        rcols = _schema_cols(node.right.schema)
+        l_keys = tuple(lcols[k] for k in node.keys)
+        r_keys = tuple(rcols[k] for k in node.keys)
+        out, ov = R.antijoin(left, right, l_keys, r_keys,
+                             left.capacity, self.cfg.semiring)
+        return out, ovl | ovr | ov
+
+    def _eval_concat(self, node: I.Concat, env: Env):
+        return self._concat([node.left, node.right], env)
+
+    def _eval_concatall(self, node: I.ConcatAll, env: Env):
+        return self._concat(list(node.inputs), env)
+
+    def _concat(self, irs, env):
+        rels = []
+        ovf = jnp.zeros((), bool)
+        for ir in irs:
+            r, o = self._eval(ir, env)
+            rels.append(r)
+            ovf |= o
+        cap = max(r.capacity for r in rels)
+        out, ov = R.concat_all(rels, self.cfg.semiring, cap)
+        return out, ovf | ov
+
+    def _eval_distinct(self, node: I.Distinct, env: Env):
+        child, ovf = self._eval(node.child, env)
+        out, ov = R.dedupe(child.data, child.val, self.cfg.semiring,
+                           child.capacity)
+        return out, ovf | ov
+
+    def _eval_reduce(self, node: I.Reduce, env: Env):
+        child, ovf = self._eval(node.child, env)
+        cols = _schema_cols(node.child.schema)
+        group_cols = tuple(cols[g] for g in node.group)
+        agg_specs = tuple((f, cols[c]) for f, c in node.aggs)
+        reduced, ov = R.reduce_groups(
+            child, group_cols, agg_specs, child.capacity)
+        # reduce_groups emits [group..., aggs...]; permute to node.schema
+        perm = []
+        gi, ai = 0, 0
+        for c in node.schema:
+            if gi < len(node.group) and c == node.group[gi]:
+                perm.append(gi)
+                gi += 1
+            else:
+                perm.append(len(node.group) + ai)
+                ai += 1
+        if perm != list(range(len(perm))):
+            data = reduced.data[:, jnp.array(perm)]
+            reduced, ov2 = R.dedupe(data, None, self.cfg.semiring,
+                                    reduced.capacity)
+            ov = ov | ov2
+        return reduced, ovf | ov

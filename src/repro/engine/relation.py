@@ -1,0 +1,139 @@
+"""Fixed-capacity relations — the TPU stand-in for DD collections.
+
+A ``Relation`` is a struct-of-arrays pytree:
+
+    data : int32[capacity, arity]   tuple columns
+    val  : int32[capacity] | None   diff/monoid payload (None = presence,
+                                    the zero-bit struct of Sec. 8)
+    n    : int32[]                  live row count
+
+Invariants maintained by every relop:
+  * rows [0, n) are live, rows [n, cap) are PAD (all-PAD columns,
+    identity payload);
+  * live rows are sorted by packed row key and duplicate-free
+    (an "arrangement" in DD terms — the sorted array IS the index).
+
+XLA needs static shapes, so data-dependent outputs (joins) write into
+bounded buffers and report overflow; the engine retries with doubled
+capacity from the host. The structural optimizer (Sec. 5) exists to keep
+these intermediates small — worst-case bounds become memory-safety
+guarantees here.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+
+# Packed 62-bit join keys need int64; the engine enables x64 at import.
+# Model/launch code never relies on implicit 64-bit defaults (all dtypes
+# explicit), so this is safe process-wide.
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+
+PAD = jnp.iinfo(jnp.int32).max
+KEY_PAD = jnp.iinfo(jnp.int64).max
+
+
+class Relation(NamedTuple):
+    data: jax.Array            # int32[cap, arity]
+    val: Optional[jax.Array]   # int32[cap] or None
+    n: jax.Array               # int32 scalar
+
+    @property
+    def capacity(self) -> int:
+        return self.data.shape[0]
+
+    @property
+    def arity(self) -> int:
+        return self.data.shape[1]
+
+
+def empty(cap: int, arity: int, val_identity=None) -> Relation:
+    data = jnp.full((cap, arity), PAD, dtype=jnp.int32)
+    val = None
+    if val_identity is not None:
+        val = jnp.full((cap,), val_identity, dtype=jnp.int32)
+    return Relation(data, val, jnp.zeros((), jnp.int32))
+
+
+def from_numpy(rows: np.ndarray, cap: int, val: Optional[np.ndarray] = None,
+               val_identity=None, dedupe: bool = True) -> Relation:
+    """Build a sorted, distinct relation from an (n, arity) int array."""
+    rows = np.asarray(rows, dtype=np.int64)
+    if rows.ndim == 1:
+        rows = rows[:, None]
+    n, arity = rows.shape
+    if n > cap:
+        raise ValueError(f"{n} rows exceed capacity {cap}")
+    if val is None and dedupe and n:
+        rows = np.unique(rows, axis=0)
+        n = rows.shape[0]
+    elif n:
+        order = np.lexsort(tuple(rows[:, c] for c in reversed(range(arity))))
+        rows = rows[order]
+        if val is not None:
+            val = np.asarray(val)[order]
+    data = np.full((cap, arity), int(PAD), dtype=np.int32)
+    data[:n] = rows
+    v = None
+    if val is not None:
+        identity = 0 if val_identity is None else val_identity
+        v = np.full((cap,), identity, dtype=np.int32)
+        v[:n] = val
+        v = jnp.asarray(v)
+    elif val_identity is not None:
+        v = jnp.full((cap,), val_identity, dtype=jnp.int32)
+    return Relation(jnp.asarray(data), v, jnp.asarray(n, jnp.int32))
+
+
+def to_numpy(rel: Relation) -> np.ndarray:
+    n = int(rel.n)
+    return np.asarray(rel.data[:n])
+
+
+def to_numpy_with_val(rel: Relation) -> tuple[np.ndarray, np.ndarray]:
+    n = int(rel.n)
+    return np.asarray(rel.data[:n]), (
+        np.asarray(rel.val[:n]) if rel.val is not None else None)
+
+
+# -- packed row keys ---------------------------------------------------------
+
+def pack_columns(data: jax.Array, cols: tuple[int, ...],
+                 live: jax.Array) -> jax.Array:
+    """Pack selected (join-key) columns into a single monotone int64 key;
+    dead rows map to KEY_PAD so they sort last. Join keys of 1-2 columns
+    are always safe (31 bits each for non-negative int32); 3 columns
+    assume values < 2^21 (the paper pre-hashes strings to dense ints)."""
+    k = len(cols)
+    if k == 0:
+        key = jnp.zeros((data.shape[0],), jnp.int64)
+        return jnp.where(live, key, KEY_PAD)
+    bits = {1: 62, 2: 31, 3: 21}.get(k)
+    if bits is None:
+        raise ValueError(
+            f"join keys of {k} columns unsupported (pack overflow)")
+    key = jnp.zeros((data.shape[0],), jnp.int64)
+    for c in cols:
+        key = (key << bits) | data[:, c].astype(jnp.int64)
+    return jnp.where(live, key, KEY_PAD)
+
+
+def live_mask(rel: Relation) -> jax.Array:
+    return jnp.arange(rel.capacity) < rel.n
+
+
+def lex_order(data: jax.Array) -> jax.Array:
+    """Row ordering permutation: lexicographic by column 0, 1, ...; PAD
+    rows sort last (PAD is the int32 maximum in every column)."""
+    arity = data.shape[1]
+    return jnp.lexsort(tuple(data[:, c] for c in range(arity - 1, -1, -1)))
+
+
+def rows_equal_prev(data: jax.Array) -> jax.Array:
+    """For sorted data: row i equals row i-1 (row 0 -> False)."""
+    eq = jnp.all(data[1:] == data[:-1], axis=1)
+    return jnp.concatenate([jnp.zeros((1,), bool), eq])

@@ -1,0 +1,302 @@
+"""Physical relational operators in JAX — the differential-operator layer.
+
+Every op consumes/produces the sorted, distinct, fixed-capacity
+``Relation`` struct (see relation.py) and returns an overflow flag when a
+bounded data-dependent output may have been truncated. Ops are pure and
+shape-static, so the whole iteration body fuses under jit, and the same
+code lowers under pjit/shard_map for scale-out (DESIGN.md §7).
+
+Correspondence to DD operators (paper Sec. 2.3):
+    arrange        -> ``arrange`` (sort by join-key prefix)
+    join_core      -> ``join`` (sort-merge: searchsorted + bounded expand)
+    distinct       -> ``dedupe``
+    concat         -> ``concat_all`` + ``dedupe``
+    antijoin       -> ``antijoin`` (the Boolean-lift of Sec. 8: membership
+                      materialized as 0/1, subtracted, thresholded)
+    reduce         -> ``reduce`` (sorted segment aggregation)
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.engine.relation import (
+    KEY_PAD, PAD, Relation, lex_order, live_mask, pack_columns,
+    rows_equal_prev,
+)
+from repro.engine.semiring import Semiring, PRESENCE
+
+
+def _take_rows(data: jax.Array, idx: jax.Array) -> jax.Array:
+    return jnp.take(data, idx, axis=0, mode="clip")
+
+
+def _scatter_compact(data, val, keep, out_cap, val_identity):
+    """Stable compaction: keep[i] rows move to positions cumsum-1; result
+    preserves input order. Returns (data, val, n, overflow)."""
+    pos = jnp.cumsum(keep.astype(jnp.int32)) - 1
+    n = jnp.maximum(pos[-1] + 1, 0).astype(jnp.int32) if keep.shape[0] else (
+        jnp.zeros((), jnp.int32))
+    n = jnp.where(keep.any(), pos[-1] + 1, 0).astype(jnp.int32)
+    overflow = n > out_cap
+    tgt = jnp.where(keep, pos, out_cap)  # out-of-bounds -> dropped
+    out = jnp.full((out_cap, data.shape[1]), PAD, jnp.int32)
+    out = out.at[tgt].set(data, mode="drop")
+    vout = None
+    if val is not None:
+        vout = jnp.full((out_cap,) + val.shape[1:], val_identity, val.dtype)
+        vout = vout.at[tgt].set(val, mode="drop")
+    return out, vout, jnp.minimum(n, out_cap), overflow
+
+
+def dedupe(data: jax.Array, val: Optional[jax.Array], sr: Semiring,
+           out_cap: int, assume_sorted: bool = False):
+    """Sort rows, combine duplicate rows' values with ``sr.add`` (presence:
+    drop duplicates), emit sorted distinct rows. PAD rows (data == PAD in
+    every column) are dropped. Returns (Relation, overflow)."""
+    if sr.has_value and val is None:
+        val = jnp.ones((data.shape[0],), sr.dtype)  # implicit lift (Sec. 8)
+    if not assume_sorted:
+        order = lex_order(data)
+        data = data[order]
+        if val is not None:
+            val = val[order]
+    if data.shape[1] == 0:
+        raise ValueError("zero-arity relations are stored with a dummy "
+                         "constant column (see engine)")
+    live = ~jnp.all(data == PAD, axis=1)
+    dup = rows_equal_prev(data) & live
+    first = live & ~dup
+    if val is not None and sr.has_value:
+        seg = jnp.cumsum(first.astype(jnp.int32)) - 1
+        seg = jnp.where(live, seg, data.shape[0])  # drop dead rows
+        agg = jax.ops.segment_sum if sr.name == "counting" else (
+            jax.ops.segment_min if sr.name == "min" else jax.ops.segment_max)
+        combined = agg(val, seg, num_segments=data.shape[0])
+        # positions of firsts get the combined value
+        val = jnp.where(first, combined[jnp.cumsum(first) - 1], val)
+        if sr.name == "counting":
+            # drop rows whose combined count is 0 (retraction fixpoint)
+            first = first & (val != 0)
+    d, v, n, ov = _scatter_compact(
+        data, val, first, out_cap, sr.identity if sr.has_value else 0)
+    if not sr.has_value:
+        v = None
+    return Relation(d, v, n), ov
+
+
+def arrange(rel: Relation, key_cols: tuple[int, ...]) -> Relation:
+    """Sort a relation so ``key_cols`` form the primary sort order (the
+    DD 'arrangement'). Remaining columns keep relative order (stable)."""
+    perm = list(key_cols) + [c for c in range(rel.arity)
+                             if c not in key_cols]
+    reordered = rel.data[:, jnp.array(perm)]
+    order = lex_order(reordered)
+    data = rel.data[order]
+    val = rel.val[order] if rel.val is not None else None
+    return Relation(data, val, rel.n)
+
+
+def _searchsorted(sorted_keys, query):
+    lo = jnp.searchsorted(sorted_keys, query, side="left")
+    hi = jnp.searchsorted(sorted_keys, query, side="right")
+    return lo, hi
+
+
+def expand_indices(counts: jax.Array, offsets: jax.Array, out_cap: int):
+    """The bounded 'repeat' pattern: output slot j maps to input row
+    i = searchsorted(offsets, j, 'right') with within-group index
+    j - offsets[i-1]. Returns (row_idx, within_idx, valid)."""
+    total = offsets[-1]
+    j = jnp.arange(out_cap)
+    i = jnp.searchsorted(offsets, j, side="right")
+    prev = jnp.where(i > 0, offsets[jnp.maximum(i - 1, 0)], 0)
+    within = j - prev
+    valid = j < total
+    return i, within, valid, total
+
+
+def join(left: Relation, right: Relation,
+         l_keys: tuple[int, ...], r_keys: tuple[int, ...],
+         l_out: tuple[int, ...], r_out: tuple[int, ...],
+         sr: Semiring, out_cap: int,
+         arranged: bool = False):
+    """Sort-merge inner join. Output columns = left[l_out] ++ right[r_out]
+    (unsorted; callers dedupe/arrange downstream). Returns
+    (data, val, valid_mask, total, overflow) — 'loose rows', so fused
+    consumers (Join-FlatMap) can filter/project before compaction."""
+    if not arranged:
+        left = arrange(left, l_keys)
+        right = arrange(right, r_keys)
+    lk = pack_columns(left.data, l_keys, live_mask(left))
+    rk = pack_columns(right.data, r_keys, live_mask(right))
+    lo, hi = _searchsorted(rk, lk)
+    counts = jnp.where(live_mask(left), hi - lo, 0)
+    offsets = jnp.cumsum(counts)
+    li, within, valid, total = expand_indices(counts, offsets, out_cap)
+    ri = _take_rows(lo, li) + within
+    ldata = _take_rows(left.data, li)
+    rdata = _take_rows(right.data, ri)
+    cols = []
+    if l_out:
+        cols.append(ldata[:, jnp.array(l_out)])
+    if r_out:
+        cols.append(rdata[:, jnp.array(r_out)])
+    data = jnp.concatenate(cols, axis=1) if cols else jnp.zeros(
+        (out_cap, 0), jnp.int32)
+    val = None
+    if sr.has_value and sr.mul is not None:
+        lval = _take_rows(left.val, li) if left.val is not None else 1
+        rval = _take_rows(right.val, ri) if right.val is not None else 1
+        val = sr.mul(lval, rval)
+    overflow = total > out_cap
+    return data, val, valid, total, overflow
+
+
+def membership(left: Relation, right: Relation,
+               l_keys: tuple[int, ...], r_keys: tuple[int, ...],
+               right_arranged: bool = False) -> jax.Array:
+    """Boolean mask over left rows: does the key appear in right?
+    (The lift operator of Sec. 8 materializes this 0/1.)"""
+    if not right_arranged:
+        right = arrange(right, r_keys)
+    if len(l_keys) == 0:
+        # ground guard: right non-empty?
+        return jnp.broadcast_to(right.n > 0, (left.capacity,))
+    lk = pack_columns(left.data, l_keys, live_mask(left))
+    rk = pack_columns(right.data, r_keys, live_mask(right))
+    lo, hi = _searchsorted(rk, lk)
+    return (hi > lo) & live_mask(left)
+
+
+def semijoin(left: Relation, right: Relation,
+             l_keys: tuple[int, ...], r_keys: tuple[int, ...],
+             out_cap: Optional[int] = None, sr: Semiring = PRESENCE):
+    out_cap = out_cap or left.capacity
+    keep = membership(left, right, l_keys, r_keys)
+    d, v, n, ov = _scatter_compact(
+        left.data, left.val, keep, out_cap,
+        sr.identity if sr.has_value else 0)
+    return Relation(d, v if left.val is not None else None, n), ov
+
+
+def antijoin(left: Relation, right: Relation,
+             l_keys: tuple[int, ...], r_keys: tuple[int, ...],
+             out_cap: Optional[int] = None, sr: Semiring = PRESENCE):
+    out_cap = out_cap or left.capacity
+    keep = (~membership(left, right, l_keys, r_keys)) & live_mask(left)
+    d, v, n, ov = _scatter_compact(
+        left.data, left.val, keep, out_cap,
+        sr.identity if sr.has_value else 0)
+    return Relation(d, v if left.val is not None else None, n), ov
+
+
+def difference(a: Relation, b: Relation) -> tuple[Relation, jax.Array]:
+    """Rows of a (all columns as key) not present in b."""
+    cols = tuple(range(a.arity))
+    return antijoin(a, b, cols, cols)
+
+
+def concat_all(rels: Sequence[Relation], sr: Semiring, out_cap: int):
+    """Multiway union with value combine (ConcatAll, Sec. 4)."""
+    data = jnp.concatenate([r.data for r in rels], axis=0)
+    val = None
+    if sr.has_value:
+        val = jnp.concatenate(
+            [r.val if r.val is not None
+             else jnp.ones((r.capacity,), sr.dtype) for r in rels])
+    return dedupe(data, val, sr, out_cap)
+
+
+def merge(full: Relation, delta: Relation, sr: Semiring, out_cap: int):
+    """full ∪ delta with sr.add combine. Returns (Relation, overflow)."""
+    return concat_all([full, delta], sr, out_cap)
+
+
+def merge_with_delta(full: Relation, derived: Relation, sr: Semiring,
+                     out_cap: int):
+    """Merge ``derived`` into ``full``; return (new_full, new_delta, ovf).
+
+    PRESENCE: delta = derived rows not already in full (set difference).
+    MIN/MAX:  delta = rows whose lattice value strictly improved.
+    This single primitive is the semi-naive frontier step (Sec. 2.2) and
+    the monoid iteration of Sec. 9.
+    """
+    new_full, ov1 = merge(full, derived, sr, out_cap)
+    if not sr.has_value:
+        delta, ov2 = difference(derived, full)
+        return new_full, delta, ov1 | ov2
+    # lattice: look up each new_full row's key in old full, compare values
+    cols = tuple(range(full.arity))
+    fk = pack_columns(full.data, cols, live_mask(full))
+    nk = pack_columns(new_full.data, cols, live_mask(new_full))
+    lo = jnp.searchsorted(fk, nk, side="left")
+    found = (jnp.take(fk, lo, mode="clip") == nk) & (nk != KEY_PAD)
+    old_val = jnp.where(found, jnp.take(full.val, lo, mode="clip"),
+                        sr.identity)
+    improved = jnp.where(
+        live_mask(new_full), sr.improves(new_full.val, old_val), False)
+    d, v, n, ov2 = _scatter_compact(
+        new_full.data, new_full.val, improved, out_cap, sr.identity)
+    return new_full, Relation(d, v, n), ov1 | ov2
+
+
+def reduce_groups(rel: Relation, group_cols: tuple[int, ...],
+                  aggs: tuple[tuple[str, int], ...], out_cap: int):
+    """Stratified grouped aggregation: sort by group key, segment-reduce.
+    Output data columns = group_cols ++ one column per agg. COUNT counts
+    *distinct* tuples (set semantics, matching Datalog COUNT(y))."""
+    r = arrange(rel, group_cols)
+    live = live_mask(r)
+    gkey = pack_columns(r.data, group_cols, live)
+    first = jnp.concatenate(
+        [live[:1], (gkey[1:] != gkey[:-1]) & live[1:]])
+    seg = jnp.cumsum(first.astype(jnp.int32)) - 1
+    seg = jnp.where(live, seg, r.capacity)
+    outs = []
+    for func, col in aggs:
+        x = r.data[:, col]
+        if func == "COUNT":
+            res = jax.ops.segment_sum(
+                jnp.ones_like(x), seg, num_segments=r.capacity)
+        elif func == "SUM":
+            res = jax.ops.segment_sum(x, seg, num_segments=r.capacity)
+        elif func == "MIN":
+            res = jax.ops.segment_min(x, seg, num_segments=r.capacity)
+        elif func == "MAX":
+            res = jax.ops.segment_max(x, seg, num_segments=r.capacity)
+        else:
+            raise ValueError(func)
+        outs.append(res)
+    ngroups = jnp.sum(first.astype(jnp.int32))
+    gdata = jnp.compress  # placeholder to appease linters; not used
+    # first-row group tuples, compacted
+    gcols = r.data[:, jnp.array(group_cols)] if group_cols else jnp.zeros(
+        (r.capacity, 0), jnp.int32)
+    agg_mat = jnp.stack(outs, axis=1).astype(jnp.int32)  # [cap, n_aggs]
+    # compacted positions for firsts
+    pos = jnp.cumsum(first.astype(jnp.int32)) - 1
+    tgt = jnp.where(first, pos, out_cap)
+    width = len(group_cols) + len(aggs)
+    out = jnp.full((out_cap, width), PAD, jnp.int32)
+    if group_cols:
+        out = out.at[tgt, :len(group_cols)].set(gcols, mode="drop")
+    out = out.at[tgt, len(group_cols):].set(
+        agg_mat[seg.clip(0, r.capacity - 1)], mode="drop")
+    overflow = ngroups > out_cap
+    n = jnp.minimum(ngroups, out_cap)
+    # rows already emitted in group-key order; re-sort to full-row order
+    return dedupe(out, None, PRESENCE, out_cap, assume_sorted=False)[0], (
+        overflow)
+
+
+def as_columns(rel: Relation) -> jax.Array:
+    """Expose a monoid relation's value as a trailing data column (Scan of
+    a monoid IDB, e.g. cc(y, i) reads i from the diff; Sec. 9)."""
+    if rel.val is None:
+        return rel.data
+    vcol = jnp.where(live_mask(rel), rel.val, PAD).astype(jnp.int32)
+    return jnp.concatenate([rel.data, vcol[:, None]], axis=1)

@@ -1,0 +1,93 @@
+"""Boolean / algebraic specialization (paper Sec. 8-9).
+
+Every relation row conceptually carries a ``diff`` drawn from a monoid.
+FlowLog's insight: batch Datalog only needs *presence* — restricting the
+diff to the Booleans turns join into AND, concat into OR, and lets the
+diff be stored as a zero-bit struct. Incremental Datalog needs (ℤ, +);
+recursive aggregation bakes MIN/MAX into the diff.
+
+In this executor:
+
+* ``PRESENCE``  — no value array at all (the zero-bit presence struct).
+* ``COUNTING``  — int32 multiplicities; negative = retraction.
+* ``MIN/MAX``   — lattice value combined on dedupe/merge; the delta of an
+                  iteration is the set of rows whose value *improved*
+                  (this is how CC/SSSP run without retractions, Sec. 9).
+* ``VECTOR``    — (ℝ^d, +) payload; used when GNN message passing is
+                  lowered through the relational engine (DESIGN.md §4).
+
+``lift`` (Sec. 8) casts between diff types: e.g. an antijoin under
+PRESENCE lifts to integers, subtracts, and thresholds back to a Boolean.
+In the executor, lift happens implicitly: membership tests materialize
+0/1 integers from presence masks.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Callable, Optional
+
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Semiring:
+    name: str
+    has_value: bool
+    # identity for merge-combine; also the pad value for invalid rows
+    identity: Optional[float]
+    # combine two diffs for the same tuple (concat/merge): OR / + / MIN
+    add: Optional[Callable]
+    # combine diffs of joined tuples: AND / * / pass-through
+    mul: Optional[Callable]
+    # does a merged value "improve" (generate a delta) over the old one?
+    improves: Optional[Callable]
+    dtype: Optional[jnp.dtype] = None
+
+
+PRESENCE = Semiring(
+    name="presence",
+    has_value=False,
+    identity=None,
+    add=None,
+    mul=None,
+    improves=None,
+)
+
+COUNTING = Semiring(
+    name="counting",
+    has_value=True,
+    identity=0,
+    add=lambda a, b: a + b,
+    mul=lambda a, b: a * b,
+    improves=lambda new, old: new != old,
+    dtype=jnp.int32,
+)
+
+MIN_MONOID = Semiring(
+    name="min",
+    has_value=True,
+    identity=jnp.iinfo(jnp.int32).max,
+    add=jnp.minimum,
+    mul=None,               # MIN values flow through joins as data columns
+    improves=lambda new, old: new < old,
+    dtype=jnp.int32,
+)
+
+MAX_MONOID = Semiring(
+    name="max",
+    has_value=True,
+    identity=jnp.iinfo(jnp.int32).min,
+    add=jnp.maximum,
+    mul=None,
+    improves=lambda new, old: new > old,
+    dtype=jnp.int32,
+)
+
+
+def monoid_for(func: str) -> Semiring:
+    if func == "MIN":
+        return MIN_MONOID
+    if func == "MAX":
+        return MAX_MONOID
+    raise ValueError(f"no lattice monoid for {func}")

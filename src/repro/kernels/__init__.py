@@ -1,0 +1,31 @@
+"""Pallas TPU kernels for FlowLog-JAX's compute hot-spots.
+
+Each kernel ships three layers:
+  <name>.py — pl.pallas_call body + BlockSpec VMEM tiling (TPU target,
+              validated with interpret=True on CPU)
+  ops.py    — jit'd public wrappers with shape plumbing + fallback
+  ref.py    — pure-jnp oracles the tests assert against
+
+Kernels:
+  segment_reduce  — sorted-segment sum/min/max. Serves Datalog grouped
+                    aggregation, GNN message aggregation (the
+                    jax.ops.segment_sum hot path), and recsys
+                    embedding-bag reduction.
+  merge_probe     — blocked binary search of probe keys into a sorted
+                    build array: the count/locate phase of the engine's
+                    sort-merge join (DD's arrangement probe on TPU).
+  fm_interaction  — factorization-machine 2-way interaction via the
+                    O(nk) sum-square trick, fused over batch blocks.
+  flash_attention — blocked online-softmax attention (causal/full, GQA)
+                    for the LM architectures' train/prefill path.
+  flash_decode    — split-KV decode attention for 32k..512k contexts.
+"""
+from repro.kernels.ops import (
+    segment_reduce, merge_probe_counts, fm_interaction, flash_attention,
+    flash_decode,
+)
+
+__all__ = [
+    "segment_reduce", "merge_probe_counts", "fm_interaction",
+    "flash_attention", "flash_decode",
+]

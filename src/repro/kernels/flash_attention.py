@@ -1,0 +1,201 @@
+"""Blocked online-softmax attention (FlashAttention-style) for TPU,
+with GQA support — the LM architectures' train/prefill hot path — plus a
+split-KV decode variant for 32k..512k contexts.
+
+TPU adaptation notes (vs. the CUDA formulation):
+* block shapes are MXU-aligned (q_block x d and kv_block x d tiles with
+  d in {64, 128, 256} — all assigned archs qualify);
+* the softmax running state (m, l) and the f32 accumulator live in VMEM
+  scratch across the sequential kv grid dimension;
+* causal skipping is grid-level: fully-masked (q_blk, kv_blk) pairs are
+  guarded out with pl.when, so the causal prefill does ~half the work;
+* GQA is an index_map: q-head h reads kv-head h // group — no repeat
+  materialization (the jnp reference repeats; the kernel must not).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                 scale: float, causal: bool, q_block: int, kv_block: int,
+                 kv_len: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    n_kv = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_base = qi * q_block + (kv_len - pl.num_programs(2) * q_block)
+    kv_base = ki * kv_block
+    live = (kv_base <= q_base + q_block - 1) if causal else (ki >= 0)
+
+    @pl.when(live)
+    def _work():
+        q = q_ref[0, 0].astype(jnp.float32)       # [q_block, d]
+        k = k_ref[0, 0].astype(jnp.float32)       # [kv_block, d]
+        v = v_ref[0, 0].astype(jnp.float32)       # [kv_block, d]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # [qb, kb]
+        if causal:
+            qpos = q_base + jax.lax.broadcasted_iota(
+                jnp.int32, (q_block, kv_block), 0)
+            kpos = kv_base + jax.lax.broadcasted_iota(
+                jnp.int32, (q_block, kv_block), 1)
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_cur = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_cur[:, None])
+        alpha = jnp.exp(m_prev - m_cur)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_cur
+
+    @pl.when(ki == n_kv - 1)
+    def _finish():
+        l = l_ref[...]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / safe[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "q_block", "kv_block", "interpret"))
+def flash_attention_pallas(
+    q: jax.Array,              # [b, hq, sq, d]
+    k: jax.Array,              # [b, hkv, skv, d]
+    v: jax.Array,              # [b, hkv, skv, d]
+    causal: bool = True,
+    q_block: int = 128,
+    kv_block: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    scale = float(1.0 / (d ** 0.5))
+    q_block = min(q_block, max(8, pl.next_power_of_2(sq)))
+    kv_block = min(kv_block, max(8, pl.next_power_of_2(skv)))
+    assert sq % q_block == 0 and skv % kv_block == 0, (
+        "pad sequence to block multiple")
+    grid = (b, hq, sq // q_block, skv // kv_block)
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, causal=causal, q_block=q_block,
+        kv_block=kv_block, kv_len=skv)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, q_block, d),
+                         lambda bi, h, qi, ki: (bi, h, qi, 0)),
+            pl.BlockSpec((1, 1, kv_block, d),
+                         lambda bi, h, qi, ki, g=group: (bi, h // g, ki, 0)),
+            pl.BlockSpec((1, 1, kv_block, d),
+                         lambda bi, h, qi, ki, g=group: (bi, h // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, q_block, d),
+                               lambda bi, h, qi, ki: (bi, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_block,), jnp.float32),
+            pltpu.VMEM((q_block,), jnp.float32),
+            pltpu.VMEM((q_block, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, m_ref, l_ref,
+                   acc_ref, *, scale: float, kv_block: int):
+    ki = pl.program_id(2)
+    n_kv = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    kv_base = ki * kv_block
+    valid_len = len_ref[0]
+
+    @pl.when(kv_base < valid_len)
+    def _work():
+        q = q_ref[0, 0].astype(jnp.float32)        # [1, d] (sq=1)
+        k = k_ref[0, 0].astype(jnp.float32)        # [kv_block, d]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # [1, kb]
+        kpos = kv_base + jax.lax.broadcasted_iota(
+            jnp.int32, (1, kv_block), 1)
+        s = jnp.where(kpos < valid_len, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_cur = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_cur[:, None])
+        alpha = jnp.exp(m_prev - m_cur)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_cur
+
+    @pl.when(ki == n_kv - 1)
+    def _finish():
+        l = l_ref[...]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / safe[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("kv_block", "interpret"))
+def flash_decode_pallas(
+    q: jax.Array,              # [b, hq, d]   (one new token per sequence)
+    k: jax.Array,              # [b, hkv, S, d]
+    v: jax.Array,              # [b, hkv, S, d]
+    kv_len: jax.Array,         # [b] int32 valid prefix length
+    kv_block: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    b, hq, d = q.shape
+    hkv, S = k.shape[1], k.shape[2]
+    group = hq // hkv
+    scale = float(1.0 / (d ** 0.5))
+    kv_block = min(kv_block, max(8, pl.next_power_of_2(S)))
+    assert S % kv_block == 0
+    q4 = q[:, :, None, :]                          # [b, hq, 1, d]
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, scale=scale, kv_block=kv_block),
+        grid=(b, hq, S // kv_block),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, d), lambda bi, h, ki: (bi, h, 0, 0)),
+            pl.BlockSpec((1, 1, kv_block, d),
+                         lambda bi, h, ki, g=group: (bi, h // g, ki, 0)),
+            pl.BlockSpec((1, 1, kv_block, d),
+                         lambda bi, h, ki, g=group: (bi, h // g, ki, 0)),
+            pl.BlockSpec((1,), lambda bi, h, ki: (bi,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, d), lambda bi, h, ki: (bi, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, 1, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q4, k, v, kv_len.astype(jnp.int32))
+    return out[:, :, 0, :]

@@ -1,0 +1,88 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Each op takes ``backend=``:
+  "pallas"     — compiled Pallas kernel (TPU deployment path)
+  "interpret"  — Pallas kernel body interpreted on CPU (how this
+                 container validates the kernels)
+  "xla"        — the pure-jnp reference (also the dry-run lowering path,
+                 so cost_analysis reflects XLA collectives/fusions; see
+                 DESIGN.md §5)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.fm_interaction import fm_interaction_pallas
+from repro.kernels.flash_attention import (
+    flash_attention_pallas, flash_decode_pallas,
+)
+from repro.kernels.merge_probe import merge_probe_pallas
+from repro.kernels.segment_reduce import segment_reduce_pallas
+
+DEFAULT_BACKEND = "xla"
+
+
+def _resolve(backend):
+    return backend or DEFAULT_BACKEND
+
+
+def segment_reduce(values, seg_ids, num_segments, op="sum", backend=None,
+                   **kw):
+    backend = _resolve(backend)
+    if backend == "xla":
+        return ref.segment_reduce_ref(values, seg_ids, num_segments, op)
+    squeeze = values.ndim == 1
+    if squeeze:
+        values = values[:, None]
+    out = segment_reduce_pallas(
+        values, seg_ids, num_segments, op,
+        interpret=(backend == "interpret"), **kw)
+    out = out.astype(values.dtype)
+    return out[:, 0] if squeeze else out
+
+
+def merge_probe_counts(build_keys, probe_keys, backend=None, **kw):
+    backend = _resolve(backend)
+    if backend == "xla":
+        return ref.merge_probe_ref(build_keys, probe_keys)
+    return merge_probe_pallas(
+        build_keys, probe_keys, interpret=(backend == "interpret"), **kw)
+
+
+def fm_interaction(x, v, backend=None, **kw):
+    backend = _resolve(backend)
+    if backend == "xla":
+        return ref.fm_interaction_ref(x, v)
+    return fm_interaction_pallas(
+        x, v, interpret=(backend == "interpret"), **kw).astype(x.dtype)
+
+
+# above this sequence length the XLA path switches to blockwise online-
+# softmax attention (never materializes [S, S] scores)
+XLA_BLOCKWISE_THRESHOLD = 4096
+
+
+def flash_attention(q, k, v, causal=True, backend=None, **kw):
+    backend = _resolve(backend)
+    if backend == "xla":
+        if k.shape[2] >= XLA_BLOCKWISE_THRESHOLD:
+            return ref.blockwise_attention(q, k, v, causal=causal)
+        return ref.attention_ref(q, k, v, causal=causal)
+    return flash_attention_pallas(
+        q, k, v, causal=causal, interpret=(backend == "interpret"), **kw)
+
+
+def flash_decode(q, k, v, kv_len, backend=None, **kw):
+    backend = _resolve(backend)
+    if backend == "xla":
+        if isinstance(kv_len, int):
+            kv_len_arr = kv_len
+        else:
+            kv_len_arr = kv_len
+        return ref.decode_attention_ref(q, k, v, kv_len_arr)
+    if isinstance(kv_len, int):
+        kv_len = jnp.full((q.shape[0],), kv_len, jnp.int32)
+    return flash_decode_pallas(
+        q, k, v, kv_len, interpret=(backend == "interpret"), **kw)

@@ -1,0 +1,142 @@
+"""Pure-jnp oracles for every kernel. These are the semantics; kernels
+must match them (tests sweep shapes/dtypes and assert_allclose)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_reduce_ref(values: jax.Array, seg_ids: jax.Array,
+                       num_segments: int, op: str = "sum") -> jax.Array:
+    """values: [n] or [n, d]; seg_ids: [n] int32 sorted ascending (out of
+    range = dropped)."""
+    if op == "sum":
+        return jax.ops.segment_sum(values, seg_ids,
+                                   num_segments=num_segments)
+    if op == "min":
+        return jax.ops.segment_min(values, seg_ids,
+                                   num_segments=num_segments)
+    if op == "max":
+        return jax.ops.segment_max(values, seg_ids,
+                                   num_segments=num_segments)
+    raise ValueError(op)
+
+
+def merge_probe_ref(build_keys: jax.Array, probe_keys: jax.Array):
+    """build_keys sorted ascending [m]; probe [n]. Returns (lo, hi):
+    lower/upper bound positions -> match count = hi - lo."""
+    lo = jnp.searchsorted(build_keys, probe_keys, side="left")
+    hi = jnp.searchsorted(build_keys, probe_keys, side="right")
+    return lo.astype(jnp.int32), hi.astype(jnp.int32)
+
+
+def fm_interaction_ref(x: jax.Array, v: jax.Array) -> jax.Array:
+    """FM 2-way term [Rendle ICDM'10]: x [b, f] feature values,
+    v [f, k] factor embeddings. Returns [b]:
+        0.5 * sum_k ((sum_f v_fk x_f)^2 - sum_f (v_fk x_f)^2)."""
+    xv = x @ v                                 # [b, k]
+    x2v2 = (x * x) @ (v * v)                   # [b, k]
+    return 0.5 * jnp.sum(xv * xv - x2v2, axis=-1)
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                  causal: bool = True, scale: float | None = None
+                  ) -> jax.Array:
+    """q [b, hq, sq, d]; k, v [b, hkv, skv, d]; GQA: hq % hkv == 0.
+    fp32 softmax accumulation."""
+    b, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(d).astype(
+        jnp.float32)
+    logits = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32),
+        kk.astype(jnp.float32)) * scale
+    if causal:
+        skv = k.shape[2]
+        mask = jnp.tril(jnp.ones((sq, skv), bool), k=skv - sq)
+        logits = jnp.where(mask, logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", w,
+                      vv.astype(jnp.float32)).astype(q.dtype)
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         kv_len: jax.Array | int,
+                         scale: float | None = None) -> jax.Array:
+    """Single-position decode: q [b, hq, d]; k, v [b, hkv, S, d];
+    kv_len masks the valid prefix (static int or [b] array)."""
+    b, hq, d = q.shape
+    hkv, S = k.shape[1], k.shape[2]
+    group = hq // hkv
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(d).astype(
+        jnp.float32)
+    logits = jnp.einsum("bhd,bhsd->bhs", q.astype(jnp.float32),
+                        kk.astype(jnp.float32)) * scale
+    pos = jnp.arange(S)
+    if isinstance(kv_len, int):
+        mask = pos < kv_len
+        logits = jnp.where(mask[None, None, :], logits, -jnp.inf)
+    else:
+        logits = jnp.where(pos[None, None, :] < kv_len[:, None, None],
+                           logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhs,bhsd->bhd", w,
+                      vv.astype(jnp.float32)).astype(q.dtype)
+
+
+def blockwise_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True,
+                        q_chunk: int = 2048,
+                        kv_chunk: int = 2048) -> jax.Array:
+    """Memory-bounded attention in pure XLA: unrolled q x kv blocks with
+    online softmax — numerically identical to attention_ref, never
+    materializes the full [S, S] score matrix. This is the
+    deploy-without-Pallas formulation the dry-run lowers for long
+    sequences (the Pallas flash kernel is the on-device hot path)."""
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    scale = 1.0 / (d ** 0.5)
+    offset = skv - sq                       # causal alignment (q at end)
+    n_q = max(sq // q_chunk, 1)
+    n_kv = max(skv // kv_chunk, 1)
+    q_chunk = sq // n_q
+    kv_chunk = skv // n_kv
+
+    outs = []
+    for qi in range(n_q):
+        qs = qi * q_chunk
+        qb = q[:, :, qs:qs + q_chunk].astype(jnp.float32)
+        m = jnp.full((b, hq, q_chunk), -jnp.inf, jnp.float32)
+        l = jnp.zeros((b, hq, q_chunk), jnp.float32)
+        acc = jnp.zeros((b, hq, q_chunk, d), jnp.float32)
+        for ki in range(n_kv):
+            ks = ki * kv_chunk
+            if causal and ks > qs + offset + q_chunk - 1:
+                continue                    # fully masked block
+            kb = k[:, :, ks:ks + kv_chunk].astype(jnp.float32)
+            vb = v[:, :, ks:ks + kv_chunk].astype(jnp.float32)
+            if group > 1:
+                kb = jnp.repeat(kb, group, axis=1)
+                vb = jnp.repeat(vb, group, axis=1)
+            s = jnp.einsum("bhqd,bhkd->bhqk", qb, kb) * scale
+            if causal:
+                qpos = qs + offset + jnp.arange(q_chunk)
+                kpos = ks + jnp.arange(kv_chunk)
+                mask = kpos[None, :] <= qpos[:, None]
+                s = jnp.where(mask[None, None], s, -jnp.inf)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + p.sum(axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p, vb)
+            m = m_new
+        safe = jnp.where(l == 0.0, 1.0, l)
+        outs.append((acc / safe[..., None]).astype(q.dtype))
+    return jnp.concatenate(outs, axis=2)

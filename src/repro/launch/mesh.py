@@ -1,0 +1,30 @@
+"""Production mesh definitions.
+
+Defined as FUNCTIONS (never module-level constants) so importing this
+module does not touch jax device state — the dry-run must set
+XLA_FLAGS before the first jax initialization.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; multi-pod adds a leading 2-pod axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh():
+    """Whatever devices exist locally (CPU tests: 1x1)."""
+    n = len(jax.devices())
+    return jax.make_mesh((1, n), ("data", "model"))
+
+
+HARDWARE = {
+    # TPU v5e per-chip targets (roofline constants; EXPERIMENTS.md)
+    "peak_flops_bf16": 197e12,
+    "hbm_bw": 819e9,
+    "ici_bw_per_link": 50e9,
+}

@@ -1,0 +1,13 @@
+"""Model zoo for the assigned architectures.
+
+Families:
+  transformer.py + moe.py — decoder LMs (granite-moe x2, gemma-7b,
+      chatglm3-6b, qwen3-1.7b)
+  gnn/ — message-passing networks lowered through the relational
+      primitives (gatedgcn, gat-cora, dimenet, nequip)
+  recsys/ — factorization machine with embedding-bag lookup
+
+All parameters are plain pytrees (dicts of jnp arrays); layers are pure
+functions. Layer stacks use lax.scan over stacked weights so the HLO
+stays O(1) in depth — mandatory for tractable 512-device GSPMD compiles.
+"""

@@ -1,0 +1,1 @@
+from repro.models.gnn.common import Graph, aggregate, batched_graph_specs

@@ -1,0 +1,67 @@
+"""GAT [Velickovic et al., arXiv:1710.10903], Cora config: 2 layers,
+8 hidden units x 8 heads (concat), second layer averages heads into the
+class logits. Edge softmax = SDDMM -> segment-softmax -> SpMM, all three
+on the shared receiver-sorted arrangement.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import normal_init
+from repro.models.gnn.common import (
+    Graph, aggregate, gather, segment_softmax,
+)
+
+
+class GATConfig(NamedTuple):
+    n_layers: int = 2
+    d_hidden: int = 8
+    n_heads: int = 8
+    d_in: int = 1433
+    n_classes: int = 7
+    backend: str = "xla"
+
+
+def init_params(key, cfg: GATConfig):
+    k = jax.random.split(key, 6)
+    d, H = cfg.d_hidden, cfg.n_heads
+    return {
+        "w1": normal_init(k[0], (cfg.d_in, H, d), cfg.d_in ** -0.5),
+        "a1_src": normal_init(k[1], (H, d), d ** -0.5),
+        "a1_dst": normal_init(k[2], (H, d), d ** -0.5),
+        "w2": normal_init(k[3], (H * d, H, cfg.n_classes),
+                          (H * d) ** -0.5),
+        "a2_src": normal_init(k[4], (H, cfg.n_classes),
+                              cfg.n_classes ** -0.5),
+        "a2_dst": normal_init(k[5], (H, cfg.n_classes),
+                              cfg.n_classes ** -0.5),
+    }
+
+
+def _gat_layer(x, w, a_src, a_dst, graph: Graph, backend, concat: bool):
+    n_nodes = x.shape[0]
+    H, dout = w.shape[1], w.shape[2]
+    z = jnp.einsum("nf,fhd->nhd", x, w)                  # [N, H, d]
+    alpha_src = jnp.einsum("nhd,hd->nh", z, a_src)
+    alpha_dst = jnp.einsum("nhd,hd->nh", z, a_dst)
+    scores = jax.nn.leaky_relu(
+        gather(alpha_src, graph.senders) +
+        gather(alpha_dst, graph.receivers), 0.2)          # [E, H] SDDMM
+    att = segment_softmax(scores, graph.receivers, n_nodes, backend)
+    msg = att[:, :, None] * gather(z, graph.senders)      # [E, H, d]
+    out = aggregate(msg.reshape(-1, H * dout), graph.receivers,
+                    n_nodes, "sum", backend).reshape(n_nodes, H, dout)
+    if concat:
+        return jax.nn.elu(out).reshape(n_nodes, H * dout)
+    return out.mean(axis=1)                               # head average
+
+
+def forward(params, cfg: GATConfig, graph: Graph):
+    x = graph.node_feat.astype(jnp.float32)
+    h = _gat_layer(x, params["w1"], params["a1_src"], params["a1_dst"],
+                   graph, cfg.backend, concat=True)
+    return _gat_layer(h, params["w2"], params["a2_src"], params["a2_dst"],
+                      graph, cfg.backend, concat=False)

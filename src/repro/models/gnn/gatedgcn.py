@@ -1,0 +1,95 @@
+"""GatedGCN [Bresson & Laurent, arXiv:1711.07553; benchmarked config
+from arXiv:2003.00982]: edge-gated message passing.
+
+    e'_uv = C e_uv + D h_u + E h_v
+    eta_uv = sigmoid(e'_uv)
+    h'_v = h_v + ReLU(BN(A h_v + sum_u eta_uv * (B h_u) / (sum eta + eps)))
+    e_out = e + ReLU(BN(e'))
+
+The message computation is the engine's Join-FlatMap (edge relation
+joined with node payloads, per-edge map fused into the join output); the
+normalized aggregation is two vector-monoid reductions sharing one
+arrangement (Sec. 4/7 of the paper applied to GNNs).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import layer_norm, maybe_shard, normal_init
+from repro.models.gnn.common import Graph, aggregate, gather
+
+
+class GatedGCNConfig(NamedTuple):
+    n_layers: int = 16
+    d_hidden: int = 70
+    d_in: int = 1433
+    d_edge_in: int = 1
+    n_classes: int = 16
+    backend: str = "xla"
+    unroll: bool = False
+    shard_nodes: bool = False   # node dim over 'model' (perf iteration)
+
+
+def init_params(key, cfg: GatedGCNConfig):
+    keys = jax.random.split(key, 4 + cfg.n_layers)
+    d = cfg.d_hidden
+    s = d ** -0.5
+    layers = []
+    for i in range(cfg.n_layers):
+        k = jax.random.split(keys[i], 8)
+        layers.append({
+            "A": normal_init(k[0], (d, d), s),
+            "B": normal_init(k[1], (d, d), s),
+            "C": normal_init(k[2], (d, d), s),
+            "D": normal_init(k[3], (d, d), s),
+            "E": normal_init(k[4], (d, d), s),
+            "ln_h_g": jnp.ones((d,)), "ln_h_b": jnp.zeros((d,)),
+            "ln_e_g": jnp.ones((d,)), "ln_e_b": jnp.zeros((d,)),
+        })
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+    return {
+        "embed_h": normal_init(keys[-3], (cfg.d_in, d), cfg.d_in ** -0.5),
+        "embed_e": normal_init(keys[-2], (cfg.d_edge_in, d), 1.0),
+        "head": normal_init(keys[-1], (d, cfg.n_classes), s),
+        "layers": stacked,
+    }
+
+
+def forward(params, cfg: GatedGCNConfig, graph: Graph):
+    h = graph.node_feat.astype(jnp.float32) @ params["embed_h"]
+    e = (graph.edge_feat.astype(jnp.float32) @ params["embed_e"]
+         if graph.edge_feat is not None
+         else jnp.zeros((graph.senders.shape[0], cfg.d_hidden)))
+    n_nodes = graph.node_feat.shape[0]
+
+    def body(carry, lp):
+        h, e = carry
+        hs = gather(h, graph.senders)
+        hr = gather(h, graph.receivers)
+        e_new = e @ lp["C"] + hr @ lp["D"] + hs @ lp["E"]
+        eta = jax.nn.sigmoid(e_new)
+        msg = eta * (hs @ lp["B"])
+        num = aggregate(msg, graph.receivers, n_nodes, "sum", cfg.backend)
+        den = aggregate(eta, graph.receivers, n_nodes, "sum", cfg.backend)
+        agg = num / (den + 1e-6)
+        h_new = h + jax.nn.relu(layer_norm(
+            h @ lp["A"] + agg, lp["ln_h_g"], lp["ln_h_b"]))
+        e_out = e + jax.nn.relu(layer_norm(
+            e_new, lp["ln_e_g"], lp["ln_e_b"]))
+        if cfg.shard_nodes:
+            h_new = maybe_shard(h_new, "model", None)
+            e_out = maybe_shard(e_out, "dp", None)
+        return (h_new, e_out), None
+
+    if cfg.unroll:
+        carry = (h, e)
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            carry, _ = body(carry, lp)
+        h, e = carry
+    else:
+        (h, e), _ = jax.lax.scan(body, (h, e), params["layers"])
+    return h @ params["head"]

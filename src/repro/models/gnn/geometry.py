@@ -1,0 +1,145 @@
+"""O(3) representation machinery for NequIP (l_max = 2) and DimeNet's
+angular basis.
+
+Real spherical harmonics have closed forms for l <= 2. The equivariant
+bilinear contractions (real Clebsch-Gordan tensors) and the real Wigner
+rotation matrices are derived **numerically at import time** with plain
+numpy:
+
+* ``wigner(l, R)`` — fit ``y_l(R r) = D_l(R) y_l(r)`` over sample points
+  (exact: y_l spans a (2l+1)-dim space; lstsq over >2l+1 points).
+* ``cg(l1, l2, l3)`` — the space of equivariant bilinear maps
+  V_l1 x V_l2 -> V_l3 is at most 1-dimensional; recover it as the
+  nullspace of the intertwining constraint T (D1 ⊗ D2) = D3 T stacked
+  over random rotations (SVD). This yields the *true* real CG including
+  odd-parity paths (e.g. 1x1->1, the cross product) that Gaunt-based
+  constructions miss.
+
+Tables are cached; tests assert equivariance under fresh random
+rotations (tests/test_gnn.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def real_sph_harm(l: int, r: np.ndarray | jnp.ndarray, np_mod=jnp):
+    """Real spherical harmonics (unnormalized racah/e3nn-style:
+    polynomial, norm chosen so components are comparable); r [..., 3]
+    need not be unit (we normalize). Returns [..., 2l+1]."""
+    eps = 1e-12
+    n = np_mod.sqrt((r * r).sum(-1, keepdims=True) + eps)
+    x, y, z = (r / n)[..., 0], (r / n)[..., 1], (r / n)[..., 2]
+    if l == 0:
+        return np_mod.ones(x.shape + (1,), r.dtype)
+    if l == 1:
+        return np_mod.stack([y, z, x], axis=-1)
+    if l == 2:
+        s3 = 3.0 ** 0.5
+        return np_mod.stack([
+            s3 * x * y,
+            s3 * y * z,
+            0.5 * (2 * z * z - x * x - y * y),
+            s3 * x * z,
+            0.5 * s3 * (x * x - y * y),
+        ], axis=-1)
+    raise NotImplementedError(f"l={l}")
+
+
+def _rand_rotation(rng: np.random.Generator) -> np.ndarray:
+    a = rng.normal(size=(3, 3))
+    q, r = np.linalg.qr(a)
+    q *= np.sign(np.diag(r))
+    if np.linalg.det(q) < 0:
+        q[:, 0] = -q[:, 0]
+    return q
+
+
+@functools.lru_cache(maxsize=None)
+def _sample_points(n: int = 64, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    p = rng.normal(size=(n, 3))
+    return p / np.linalg.norm(p, axis=1, keepdims=True)
+
+
+def wigner(l: int, R: np.ndarray) -> np.ndarray:
+    """Real Wigner rotation D_l(R): y_l(R r) = D_l(R) @ y_l(r)."""
+    pts = _sample_points()
+    A = np.asarray(real_sph_harm(l, pts, np))             # [n, 2l+1]
+    B = np.asarray(real_sph_harm(l, pts @ R.T, np))       # [n, 2l+1]
+    # solve B = A @ D^T  ->  D = (lstsq(A, B)).T
+    D, *_ = np.linalg.lstsq(A, B, rcond=None)
+    return D.T
+
+
+@functools.lru_cache(maxsize=None)
+def cg(l1: int, l2: int, l3: int) -> np.ndarray | None:
+    """Real Clebsch-Gordan tensor C [2l1+1, 2l2+1, 2l3+1] (unit Frobenius
+    norm), or None when no equivariant path exists."""
+    if not (abs(l1 - l2) <= l3 <= l1 + l2):
+        return None
+    d1, d2, d3 = 2 * l1 + 1, 2 * l2 + 1, 2 * l3 + 1
+    dim = d1 * d2 * d3
+    rng = np.random.default_rng(42)
+    rows = []
+    for _ in range(6):
+        R = _rand_rotation(rng)
+        D1, D2, D3 = wigner(l1, R), wigner(l2, R), wigner(l3, R)
+        # constraint: D3^T T (D1 ⊗ D2) - T = 0 for T flattened [d3, d1*d2]
+        M = np.kron(np.kron(D1, D2).T, D3.T) - np.eye(dim)
+        rows.append(M)
+    M = np.concatenate(rows, axis=0)
+    _, s, vt = np.linalg.svd(M)
+    null = vt[s.size - 1:]
+    if s[-1] > 1e-8:
+        return None                                        # no path
+    c = null[0].reshape(d1, d2, d3)
+    c = c / np.linalg.norm(c)
+    # sign convention: make the largest-magnitude entry positive
+    idx = np.unravel_index(np.argmax(np.abs(c)), c.shape)
+    if c[idx] < 0:
+        c = -c
+    return c
+
+
+def tensor_product_paths(l_max: int):
+    """All (l1, l2, l3) triples with a CG path, l's <= l_max."""
+    out = []
+    for l1 in range(l_max + 1):
+        for l2 in range(l_max + 1):
+            for l3 in range(l_max + 1):
+                t = cg(l1, l2, l3)
+                if t is not None:
+                    out.append(((l1, l2, l3), jnp.asarray(
+                        t, jnp.float32)))
+    return out
+
+
+def bessel_rbf(d: jnp.ndarray, n_rbf: int, cutoff: float) -> jnp.ndarray:
+    """DimeNet/NequIP radial basis: sin(n π d / c) / d with smooth
+    cutoff envelope. d [...]->[..., n_rbf]."""
+    d = jnp.clip(d, 1e-6, None)
+    n = jnp.arange(1, n_rbf + 1, dtype=jnp.float32)
+    x = d[..., None] / cutoff
+    basis = jnp.sqrt(2.0 / cutoff) * jnp.sin(
+        n * jnp.pi * x) / d[..., None]
+    # polynomial envelope (p=6)
+    p = 6.0
+    env = (1 - (p + 1) * (p + 2) / 2 * x ** p
+           + p * (p + 2) * x ** (p + 1)
+           - p * (p + 1) / 2 * x ** (p + 2))
+    env = jnp.where(x < 1.0, env, 0.0)
+    return basis * env
+
+
+def angular_basis(cos_angle: jnp.ndarray, n_spherical: int) -> jnp.ndarray:
+    """DimeNet angular basis: Chebyshev polynomials of cos(angle)
+    (stand-in for associated Legendre in the full spherical Bessel
+    basis). [...]->[..., n_spherical]."""
+    outs = [jnp.ones_like(cos_angle), cos_angle]
+    for _ in range(2, n_spherical):
+        outs.append(2 * cos_angle * outs[-1] - outs[-2])
+    return jnp.stack(outs[:n_spherical], axis=-1)

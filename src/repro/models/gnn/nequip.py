@@ -1,0 +1,139 @@
+"""NequIP [Batzner et al., arXiv:2101.03164]: E(3)-equivariant
+interatomic potential. Config: 5 layers, 32 channels, l_max=2, 8 radial
+basis functions, cutoff 5 Å.
+
+Features are direct sums of O(3) irreps: {l: [N, C, 2l+1]} for l=0,1,2.
+A convolution layer sends, along each edge, the tensor product of the
+sender's features with the spherical harmonics of the edge vector,
+weighted per-path by an MLP of the radial basis:
+
+    msg^{l3}_e = sum_{l1,l2} R^{l1l2l3}(d_e) *
+                 CG^{l1l2l3} (h^{l1}_{sender(e)} ⊗ Y^{l2}(r̂_e))
+    h'^{l3}_v = SelfInteraction( h^{l3}_v , sum_{e->v} msg^{l3}_e )
+
+CG tensors are derived numerically (geometry.py); equivariance is
+property-tested under random rotations. Aggregation is the shared
+vector-monoid segment reduce. Gate nonlinearity: scalars pass through
+SiLU; l>0 channels are gated by learned scalar channels.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import act_fn, normal_init
+from repro.models.gnn.common import aggregate, gather
+from repro.models.gnn.geometry import (
+    bessel_rbf, cg, real_sph_harm,
+)
+
+
+class NequIPConfig(NamedTuple):
+    n_layers: int = 5
+    channels: int = 32
+    l_max: int = 2
+    n_rbf: int = 8
+    cutoff: float = 5.0
+    n_species: int = 16
+    backend: str = "xla"
+
+
+class GeoGraph(NamedTuple):
+    positions: jax.Array     # [N, 3]
+    species: jax.Array       # [N] int32
+    senders: jax.Array       # [E] int32
+    receivers: jax.Array     # [E] int32 (sorted)
+
+
+def _paths(l_max: int):
+    out = []
+    for l1 in range(l_max + 1):
+        for l2 in range(l_max + 1):
+            for l3 in range(l_max + 1):
+                if cg(l1, l2, l3) is not None:
+                    out.append((l1, l2, l3))
+    return out
+
+
+def init_params(key, cfg: NequIPConfig):
+    paths = _paths(cfg.l_max)
+    keys = jax.random.split(key, 2 + cfg.n_layers)
+    C = cfg.channels
+    layers = []
+    for i in range(cfg.n_layers):
+        k = jax.random.split(keys[i], 3 + len(paths) + cfg.l_max + 1)
+        lp = {
+            # radial MLP: n_rbf -> one weight per (path, channel)
+            "radial_w1": normal_init(k[0], (cfg.n_rbf, 64),
+                                     cfg.n_rbf ** -0.5),
+            "radial_w2": normal_init(k[1], (64, len(paths) * C),
+                                     64 ** -0.5),
+            "gate_w": normal_init(k[2], (C, cfg.l_max * C), C ** -0.5),
+        }
+        for li in range(cfg.l_max + 1):
+            lp[f"self_{li}"] = normal_init(
+                k[3 + li], (C, C), C ** -0.5)
+            lp[f"mix_{li}"] = normal_init(
+                k[3 + cfg.l_max + 1 + li] if 3 + cfg.l_max + 1 + li < len(k)
+                else k[-1], (C, C), C ** -0.5)
+        layers.append(lp)
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+    return {
+        "embed_z": normal_init(keys[-2], (cfg.n_species, C), 1.0),
+        "head": normal_init(keys[-1], (C, 1), C ** -0.5),
+        "layers": stacked,
+    }
+
+
+def forward(params, cfg: NequIPConfig, g: GeoGraph):
+    n_nodes = g.positions.shape[0]
+    C = cfg.channels
+    paths = _paths(cfg.l_max)
+    vec = gather(g.positions, g.receivers) - gather(g.positions,
+                                                    g.senders)
+    dist = jnp.sqrt((vec * vec).sum(-1) + 1e-12)
+    rbf = bessel_rbf(dist, cfg.n_rbf, cfg.cutoff)          # [E, R]
+    sh = {l: real_sph_harm(l, vec).astype(jnp.float32)
+          for l in range(cfg.l_max + 1)}                   # [E, 2l+1]
+    cg_tabs = {p: jnp.asarray(cg(*p), jnp.float32) for p in paths}
+
+    # initial features: scalars from species embedding; l>0 zero
+    feats = {0: params["embed_z"][g.species.astype(jnp.int32)][:, :, None]}
+    for l in range(1, cfg.l_max + 1):
+        feats[l] = jnp.zeros((n_nodes, C, 2 * l + 1), jnp.float32)
+
+    def layer(feats, lp):
+        radial = act_fn("silu")(rbf @ lp["radial_w1"]) @ lp["radial_w2"]
+        radial = radial.reshape(-1, len(paths), C)         # [E, P, C]
+        msgs = {l: 0.0 for l in range(cfg.l_max + 1)}
+        for pi, (l1, l2, l3) in enumerate(paths):
+            hs = gather(feats[l1], g.senders)              # [E, C, 2l1+1]
+            y = sh[l2]                                     # [E, 2l2+1]
+            w = radial[:, pi, :]                           # [E, C]
+            m = jnp.einsum("eci,ej,ijk->eck", hs, y, cg_tabs[(l1, l2, l3)])
+            msgs[l3] = msgs[l3] + m * w[:, :, None]
+        out = {}
+        for l in range(cfg.l_max + 1):
+            agg = aggregate(
+                msgs[l].reshape(-1, C * (2 * l + 1)), g.receivers,
+                n_nodes, "sum", cfg.backend).reshape(n_nodes, C, -1)
+            h = jnp.einsum("nci,cd->ndi", feats[l], lp[f"self_{l}"]) + (
+                jnp.einsum("nci,cd->ndi", agg, lp[f"mix_{l}"]))
+            out[l] = h
+        # gate: scalars -> SiLU; l>0 gated by learned scalar gates
+        gates = jax.nn.sigmoid(
+            out[0][:, :, 0] @ lp["gate_w"]).reshape(
+            n_nodes, cfg.l_max, C)
+        res = {0: act_fn("silu")(out[0])}
+        for l in range(1, cfg.l_max + 1):
+            res[l] = out[l] * gates[:, l - 1, :, None]
+        return res
+
+    for i in range(cfg.n_layers):
+        lp = jax.tree.map(lambda x: x[i], params["layers"])
+        feats = layer(feats, lp)
+
+    energy = (feats[0][:, :, 0] @ params["head"])[:, 0]    # invariant
+    return energy

@@ -1,0 +1,142 @@
+"""Token-choice top-k MoE with sort-based dispatch.
+
+The classic GShard einsum dispatch materializes a [tokens, E, capacity]
+one-hot — O(T·E·C) memory/FLOPs, infeasible at granite's 1M-token
+batches (T·E·C ≈ 10^13). We instead dispatch the TPU-native way the
+engine joins relations (DESIGN.md §4):
+
+  1. *arrange*: stable-argsort the (token, slot) pairs by expert id;
+  2. *rank*: position-in-expert = index − first-occurrence index
+     (``searchsorted`` of the sorted keys against themselves — the same
+     probe primitive as kernels/merge_probe);
+  3. *scatter* tokens into the [E, C, d] expert buffer (unique slots;
+     capacity overflow drops into a sacrificial row — the engine's
+     bounded-expand idiom);
+  4. batched expert FFN; *gather* back and combine with gate weights.
+
+Everything is O(T·K·d) + sorts; the [E, C, d] buffer shards over the
+'model' axis (expert parallelism), and the scatter/gather lower to
+all-to-alls under GSPMD.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import act_fn, maybe_shard, normal_init
+
+
+class MoEConfig(NamedTuple):
+    n_experts: int
+    top_k: int
+    d_ff: int                  # per-expert hidden
+    capacity_factor: float = 1.25
+    act: str = "silu"
+    glu: bool = True
+
+
+def init_moe(key, cfg: MoEConfig, d_model: int, dtype=jnp.float32):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    e, f = cfg.n_experts, cfg.d_ff
+    s_in = d_model ** -0.5
+    s_out = f ** -0.5
+    p = {
+        "router": normal_init(k1, (d_model, e), s_in, dtype),
+        "w_in": normal_init(k2, (e, d_model, f), s_in, dtype),
+        "w_out": normal_init(k3, (e, f, d_model), s_out, dtype),
+    }
+    if cfg.glu:
+        p["w_gate"] = normal_init(k4, (e, d_model, f), s_in, dtype)
+    return p
+
+
+def moe_ffn(params, x: jax.Array, cfg: MoEConfig,
+            groups: int = 1):
+    """x [T, d] (tokens flattened) -> [T, d], plus aux load-balance loss.
+
+    ``groups`` > 1 splits tokens into independently-routed groups (the
+    GShard 'G' axis). The group axis shards over data parallelism
+    (explicit ``maybe_shard`` constraints), so the argsort/rank/scatter
+    bookkeeping stays shard-local and only the [G, E, C, d] expert
+    buffers cross the fabric as a true all-to-all — without this, GSPMD
+    all-gathers the global token array every layer (~34 GB/layer for
+    granite; EXPERIMENTS.md §Perf iteration 1)."""
+    t, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    # largest divisor of t that is <= groups (decode batches can be tiny)
+    g = max(v for v in range(1, min(groups, t) + 1) if t % v == 0)
+    tg = t // g
+    cap = int(max(1, (tg * k * cfg.capacity_factor) // e))
+
+    xg = maybe_shard(x.reshape(g, tg, d), "dp", None, None)
+
+    # -- phase A (vmapped, group-local): route + rank + scatter
+    bufs, slots, gates, auxs = jax.vmap(
+        lambda xx: _route_and_scatter(params, xx, cfg, cap))(xg)
+    # group axis dp-sharded; expert buffers local per group
+    bufs = maybe_shard(bufs, "dp", None, None)
+
+    # -- phase B: expert FFN. The einsum resharding (G: dp-sharded,
+    # E: model-sharded) is the all-to-all.
+    xin = maybe_shard(bufs[:, :e * cap].reshape(g, e, cap, d),
+                      "dp", "model", None, None)
+    h = jnp.einsum("gecd,edf->gecf", xin, params["w_in"])
+    if cfg.glu:
+        gate = jnp.einsum("gecd,edf->gecf", xin, params["w_gate"])
+        h = act_fn(cfg.act)(gate) * h
+    else:
+        h = act_fn(cfg.act)(h)
+    out = jnp.einsum("gecf,efd->gecd", h, params["w_out"])
+    out_flat = jnp.concatenate(
+        [out.reshape(g, e * cap, d), jnp.zeros((g, 1, d), out.dtype)],
+        axis=1)
+    # all-to-all back: expert-sharded results -> group-local buffers
+    out_flat = maybe_shard(out_flat, "dp", None, None)
+
+    # -- phase C (vmapped, group-local): gather + gate combine
+    yg = jax.vmap(
+        lambda of, sl, ga: _gather_combine(of, sl, ga, k))(
+        out_flat, slots, gates)
+    y = maybe_shard(yg, "dp", None, None).reshape(t, d)
+    return y, auxs.mean()
+
+
+def _route_and_scatter(params, x, cfg: MoEConfig, cap: int):
+    t, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    logits = (x.astype(jnp.float32) @
+              params["router"].astype(jnp.float32))        # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)                 # [T, K]
+    top_p = top_p / jnp.maximum(
+        top_p.sum(axis=-1, keepdims=True), 1e-9)
+
+    # arrange by expert + rank within expert (sorted-prefix trick; the
+    # engine's arrangement + merge_probe primitives)
+    tk = t * k
+    flat_e = top_e.reshape(tk).astype(jnp.int32)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    first = jnp.searchsorted(sorted_e, sorted_e, side="left")
+    rank_sorted = (jnp.arange(tk, dtype=jnp.int32) -
+                   first.astype(jnp.int32))
+    rank = jnp.zeros((tk,), jnp.int32).at[order].set(rank_sorted)
+    keep = rank < cap
+    slot = jnp.where(keep, flat_e * cap + rank, e * cap)   # drop row
+
+    token_idx = jnp.arange(tk, dtype=jnp.int32) // k
+    buf = jnp.zeros((e * cap + 1, d), x.dtype)
+    buf = buf.at[slot].set(jnp.take(x, token_idx, axis=0), mode="drop")
+
+    gates = (top_p.reshape(tk) * keep).astype(x.dtype)
+    top1 = jax.nn.one_hot(top_e[:, 0], e, dtype=jnp.float32)
+    aux = e * jnp.sum(top1.mean(axis=0) * probs.mean(axis=0))
+    return buf, slot, gates, aux
+
+
+def _gather_combine(out_flat, slot, gates, k: int):
+    d = out_flat.shape[-1]
+    y = jnp.take(out_flat, slot, axis=0)                   # [TK, d]
+    return (y * gates[:, None]).reshape(-1, k, d).sum(axis=1)

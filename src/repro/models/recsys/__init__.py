@@ -1,0 +1,1 @@
+from repro.models.recsys.fm import FMConfig, init_params, forward

@@ -1,0 +1,365 @@
+"""Decoder-only transformer LM covering all five assigned LM archs.
+
+Config switches: GQA kv-head count, head_dim override (gemma's 256),
+GeGLU/SwiGLU, qk-norm (qwen3), partial rotary (chatglm3's 2d RoPE),
+dense-vs-MoE FFN (granite). Layers run under lax.scan over stacked
+weights (+ optional remat) so the HLO is depth-independent — required
+for 512-device GSPMD compiles (DESIGN.md §7).
+
+Three entry points per arch: ``train_step`` (CE loss + AdamW update),
+``prefill`` (build KV cache + logits), ``decode_step`` (one token against
+a KV cache; the FlowLog incrementality analogy — the cache is an
+arrangement, the new token its delta).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.models.common import (
+    act_fn, apply_rope, cross_entropy_loss, maybe_shard, normal_init,
+    rms_norm, rope_angles,
+)
+from repro.models.moe import MoEConfig, init_moe, moe_ffn
+
+
+@dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None           # default d_model // n_heads
+    act: str = "silu"
+    glu: bool = True
+    qk_norm: bool = False
+    rope_fraction: float = 1.0               # chatglm3: 0.5 ('RoPE 2d')
+    rope_theta: float = 10000.0
+    moe: Optional[MoEConfig] = None
+    moe_groups: int = 32          # GShard group axis (shards over DP)
+    tie_embeddings: bool = True
+    dtype: str = "bfloat16"
+    remat: bool = True
+    scan_layers: bool = True                 # False: unroll (dry-run uses
+                                             # this so cost_analysis counts
+                                             # every layer + collective)
+    seq_parallel: bool = False               # Megatron-SP: residual stream
+                                             # sequence-sharded over 'model'
+                                             # (reduce-scatter+all-gather
+                                             # replaces all-reduce)
+    batch_shard_all: bool = False            # FSDP: batch sharded over ALL
+                                             # mesh axes; params gathered
+                                             # per layer (ZeRO-3)
+    attn_backend: str = "xla"                # xla | pallas | interpret
+    logit_softcap: float = 0.0               # gemma-style soft capping
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def vocab_padded(self) -> int:
+        """Embedding rows padded to a 128 multiple so the vocab dim
+        shards over the 16-way model axis (granite's 49155 -> 49280);
+        logits beyond ``vocab`` are masked to -inf."""
+        return ((self.vocab + 127) // 128) * 128
+
+    @property
+    def rot_dim(self) -> int:
+        r = int(self.hd * self.rope_fraction)
+        return r - (r % 2)
+
+    @property
+    def compute_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    def param_count(self) -> int:
+        d, hd = self.d_model, self.hd
+        attn = d * hd * (self.n_heads * 2 + self.n_kv_heads * 2)
+        if self.moe:
+            ff = self.moe.n_experts * d * self.moe.d_ff * (
+                3 if self.moe.glu else 2) + d * self.moe.n_experts
+        else:
+            ff = d * self.d_ff * (3 if self.glu else 2)
+        per_layer = attn + ff + 2 * d
+        embed = self.vocab * d * (1 if self.tie_embeddings else 2)
+        return self.n_layers * per_layer + embed + d
+
+    def active_param_count(self) -> int:
+        """FLOP-relevant parameters (MoE: top-k experts only)."""
+        if not self.moe:
+            return self.param_count()
+        d = self.d_model
+        attn = d * self.hd * (self.n_heads * 2 + self.n_kv_heads * 2)
+        ff = self.moe.top_k * d * self.moe.d_ff * (
+            3 if self.moe.glu else 2) + d * self.moe.n_experts
+        embed = self.vocab * d * (1 if self.tie_embeddings else 2)
+        return self.n_layers * (attn + ff + 2 * d) + embed + d
+
+
+class KVCache(NamedTuple):
+    k: jax.Array      # [L, B, hkv, S, hd]
+    v: jax.Array
+    length: jax.Array  # [B] int32
+
+
+def init_params(key, cfg: TransformerConfig):
+    """Stacked-layer params: every per-layer leaf has leading dim L."""
+    keys = jax.random.split(key, 10)
+    d, hd, L = cfg.d_model, cfg.hd, cfg.n_layers
+    dt = cfg.compute_dtype
+    s = d ** -0.5
+    layer = {
+        "wq": normal_init(keys[0], (L, d, cfg.n_heads * hd), s, dt),
+        "wk": normal_init(keys[1], (L, d, cfg.n_kv_heads * hd), s, dt),
+        "wv": normal_init(keys[2], (L, d, cfg.n_kv_heads * hd), s, dt),
+        "wo": normal_init(
+            keys[3], (L, cfg.n_heads * hd, d), (cfg.n_heads * hd) ** -0.5,
+            dt),
+        "ln1": jnp.zeros((L, d), dt),
+        "ln2": jnp.zeros((L, d), dt),
+    }
+    if cfg.qk_norm:
+        layer["qnorm"] = jnp.zeros((L, hd), dt)
+        layer["knorm"] = jnp.zeros((L, hd), dt)
+    if cfg.moe:
+        moe_keys = jax.random.split(keys[4], L)
+        stacked = [init_moe(k, cfg.moe, d, dt) for k in moe_keys]
+        layer["moe"] = jax.tree.map(
+            lambda *xs: jnp.stack(xs), *stacked)
+    else:
+        f = cfg.d_ff
+        layer["w_in"] = normal_init(keys[5], (L, d, f), s, dt)
+        layer["w_out"] = normal_init(keys[6], (L, f, d), f ** -0.5, dt)
+        if cfg.glu:
+            layer["w_gate"] = normal_init(keys[7], (L, d, f), s, dt)
+    params = {
+        "embed": normal_init(keys[8], (cfg.vocab_padded, d), 1.0, dt),
+        "ln_f": jnp.zeros((d,), dt),
+        "layers": layer,
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = normal_init(
+            keys[9], (d, cfg.vocab_padded), s, dt)
+    return params
+
+
+def _attention(cfg: TransformerConfig, q, k, v, causal):
+    """q [B,S,hq,hd] / k,v [B,Skv,hkv,hd] -> [B,S,hq,hd]."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    out = kops.flash_attention(qt, kt, vt, causal=causal,
+                               backend=cfg.attn_backend)
+    return out.transpose(0, 2, 1, 3)
+
+
+def _layer_fn(cfg: TransformerConfig, lp, x, sin, cos, *,
+              cache_kv=None, kv_len=None):
+    """One block. x [B,S,d]. Returns (y, (k_new, v_new), aux)."""
+    B, S, d = x.shape
+    hd, hq, hkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    h = rms_norm(x, lp["ln1"])
+    q = (h @ lp["wq"]).reshape(B, S, hq, hd)
+    k = (h @ lp["wk"]).reshape(B, S, hkv, hd)
+    v = (h @ lp["wv"]).reshape(B, S, hkv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, lp["qnorm"])
+        k = rms_norm(k, lp["knorm"])
+    q = apply_rope(q, sin, cos)
+    k = apply_rope(k, sin, cos)
+
+    if cfg.seq_parallel and cache_kv is None:
+        x = maybe_shard(x, "dp", "model", None)
+    if cfg.batch_shard_all and cache_kv is None:
+        x = _fsdp_shard(x)
+    if cache_kv is not None:
+        ck, cv = cache_kv                          # [B, hkv, Scache, hd]
+        kq = k.transpose(0, 2, 1, 3)               # [B,hkv,1,hd]
+        vq = v.transpose(0, 2, 1, 3)
+        pos = kv_len                               # [B]
+        ck = _scatter_kv(ck, kq, pos)
+        cv = _scatter_kv(cv, vq, pos)
+        attn = kops.flash_decode(
+            q.transpose(0, 2, 1, 3)[:, :, 0, :], ck, cv, pos + 1,
+            backend=cfg.attn_backend)              # [B,hq,hd]
+        attn = attn[:, None, :, :]                 # [B,1,hq,hd]
+        new_kv = (ck, cv)
+    else:
+        attn = _attention(cfg, q, k, v, causal=True)
+        new_kv = (k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3))
+    x = x + (attn.reshape(B, S, hq * hd) @ lp["wo"])
+    if cfg.seq_parallel and cache_kv is None:
+        x = maybe_shard(x, "dp", "model", None)
+    if cfg.batch_shard_all and cache_kv is None:
+        x = _fsdp_shard(x)
+
+    h2 = rms_norm(x, lp["ln2"])
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.moe:
+        y, aux = moe_ffn(lp["moe"], h2.reshape(B * S, d), cfg.moe,
+                         groups=cfg.moe_groups)
+        y = y.reshape(B, S, d)
+    else:
+        up = h2 @ lp["w_in"]
+        if cfg.glu:
+            up = act_fn(cfg.act)(h2 @ lp["w_gate"]) * up
+        else:
+            up = act_fn(cfg.act)(up)
+        y = up @ lp["w_out"]
+    out = x + y
+    if cfg.seq_parallel and cache_kv is None:
+        out = maybe_shard(out, "dp", "model", None)
+    if cfg.batch_shard_all and cache_kv is None:
+        out = _fsdp_shard(out)
+    return out, new_kv, aux
+
+
+def _fsdp_shard(x):
+    """FSDP activation layout: batch over every mesh axis; when the
+    batch doesn't divide (multi-pod, global_batch < devices) fall back
+    to batch over (pod, data) x sequence over 'model' (DP x SP)."""
+    am = jax.sharding.get_abstract_mesh()
+    names = getattr(am, "axis_names", ())
+    if not names:
+        return x
+    n_all = 1
+    for v in am.axis_sizes:
+        n_all *= v
+    if x.shape[0] % n_all == 0:
+        return maybe_shard(x, "all", None, None)
+    return maybe_shard(x, "dp", "model", None)
+
+
+def _mask_pad_vocab(logits, cfg: TransformerConfig):
+    if cfg.vocab_padded == cfg.vocab:
+        return logits
+    ids = jax.lax.broadcasted_iota(
+        jnp.int32, logits.shape, logits.ndim - 1)
+    return jnp.where(ids < cfg.vocab, logits,
+                     jnp.asarray(-1e30, logits.dtype))
+
+
+def _scatter_kv(cache, new, pos):
+    """cache [B,h,S,hd]; new [B,h,1,hd]; write at per-batch position."""
+    B = cache.shape[0]
+    oh = jax.nn.one_hot(pos, cache.shape[2],
+                        dtype=cache.dtype)          # [B, S]
+    return cache + oh[:, None, :, None] * new
+
+
+def forward(params, cfg: TransformerConfig, tokens: jax.Array):
+    """tokens [B, S] int32 -> logits [B, S, V]."""
+    B, S = tokens.shape
+    x = params["embed"][tokens.astype(jnp.int32)]
+    if cfg.batch_shard_all:
+        x = _fsdp_shard(x)
+    if cfg.name.startswith("gemma"):
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+    sin, cos = rope_angles(positions, cfg.hd, cfg.rope_theta, cfg.rot_dim)
+
+    def body(x, lp):
+        y, _, aux = _layer_fn(cfg, lp, x, sin, cos)
+        return y, aux
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    if cfg.scan_layers:
+        x, auxs = jax.lax.scan(
+            lambda carry, lp: body(carry, lp), x, params["layers"])
+        aux_total = jnp.sum(auxs)
+    else:
+        aux_total = jnp.zeros((), jnp.float32)
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            x, aux = body(x, lp)
+            aux_total = aux_total + aux
+    x = rms_norm(x, params["ln_f"])
+    unembed = (params["embed"].T if cfg.tie_embeddings
+               else params["unembed"])
+    logits = _mask_pad_vocab(x @ unembed.astype(x.dtype), cfg)
+    if cfg.logit_softcap > 0:
+        c = cfg.logit_softcap
+        logits = jnp.tanh(logits / c) * c
+    return logits, aux_total
+
+
+def loss_fn(params, cfg: TransformerConfig, tokens, labels):
+    logits, aux = forward(params, cfg, tokens)
+    ce = cross_entropy_loss(logits, labels)
+    return ce + 0.01 * aux, ce
+
+
+def prefill(params, cfg: TransformerConfig, tokens: jax.Array):
+    """tokens [B, S] -> (last-position logits [B, V], KVCache)."""
+    B, S = tokens.shape
+    x = params["embed"][tokens.astype(jnp.int32)]
+    if cfg.name.startswith("gemma"):
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+    sin, cos = rope_angles(positions, cfg.hd, cfg.rope_theta, cfg.rot_dim)
+
+    def body(x, lp):
+        y, kv, _ = _layer_fn(cfg, lp, x, sin, cos)
+        return y, kv
+
+    if cfg.scan_layers:
+        x, (ks, vs) = jax.lax.scan(
+            lambda carry, lp: body(carry, lp), x, params["layers"])
+    else:
+        kvs = []
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            x, kv = body(x, lp)
+            kvs.append(kv)
+        ks = jnp.stack([kv[0] for kv in kvs])
+        vs = jnp.stack([kv[1] for kv in kvs])
+    x = rms_norm(x, params["ln_f"])
+    unembed = (params["embed"].T if cfg.tie_embeddings
+               else params["unembed"])
+    logits = _mask_pad_vocab(x[:, -1] @ unembed.astype(x.dtype), cfg)
+    cache = KVCache(ks, vs, jnp.full((B,), S, jnp.int32))
+    return logits, cache
+
+
+def decode_step(params, cfg: TransformerConfig, token: jax.Array,
+                cache: KVCache):
+    """token [B, 1] + cache (capacity S) -> (logits [B, V], new cache)."""
+    B = token.shape[0]
+    x = params["embed"][token.astype(jnp.int32)]
+    if cfg.name.startswith("gemma"):
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    sin, cos = rope_angles(cache.length[:, None], cfg.hd, cfg.rope_theta,
+                           cfg.rot_dim)
+
+    def body(x, layer):
+        lp, ck, cv = layer
+        y, (nk, nv), _ = _layer_fn(cfg, lp, x, sin, cos,
+                                   cache_kv=(ck, cv), kv_len=cache.length)
+        return y, (nk, nv)
+
+    if cfg.scan_layers:
+        x, (ks, vs) = jax.lax.scan(
+            lambda carry, layer: body(carry, layer), x,
+            (params["layers"], cache.k, cache.v))
+    else:
+        kvs = []
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            x, kv = body(x, (lp, cache.k[i], cache.v[i]))
+            kvs.append(kv)
+        ks = jnp.stack([kv[0] for kv in kvs])
+        vs = jnp.stack([kv[1] for kv in kvs])
+    x = rms_norm(x, params["ln_f"])
+    unembed = (params["embed"].T if cfg.tie_embeddings
+               else params["unembed"])
+    logits = _mask_pad_vocab(x[:, -1] @ unembed.astype(x.dtype), cfg)
+    return logits, KVCache(ks, vs, cache.length + 1)

@@ -1,0 +1,4 @@
+from repro.training.optim import (
+    AdamWConfig, adamw_init, adamw_update, clip_by_global_norm,
+    TrainState, train_state_init,
+)

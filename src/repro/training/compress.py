@@ -1,0 +1,96 @@
+"""Gradient compression for the DP all-reduce (DESIGN.md §7).
+
+Two composable schemes, applied leaf-wise before the (implicit GSPMD)
+gradient reduction and undone after:
+
+* **int8 quantization** — per-leaf absmax scaling; 4x wire reduction for
+  fp32 grads, 2x for bf16. Unbiased via stochastic rounding.
+* **top-k sparsification with error feedback** — keep the k largest-
+  magnitude entries per leaf; the residual is fed back into the next
+  step's gradient (Stich et al.; standard EF-SGD), which keeps
+  convergence while cutting wire bytes by 1/density.
+
+On a real multi-pod fabric these wrap a shard_map'd psum; the unit tests
+validate the algebra (quantize/dequantize error bounds, EF residual
+bookkeeping) on CPU.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class CompressionState(NamedTuple):
+    residual: Any           # error-feedback memory (top-k) or None
+
+
+def init_state(grads, scheme: str) -> CompressionState:
+    if scheme == "topk":
+        return CompressionState(
+            jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32),
+                         grads))
+    return CompressionState(None)
+
+
+def quantize_int8(x: jax.Array, key: Optional[jax.Array] = None):
+    """Per-tensor absmax int8; stochastic rounding when key given."""
+    x32 = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(x32)), 1e-12) / 127.0
+    y = x32 / scale
+    if key is not None:
+        y = jnp.floor(y + jax.random.uniform(key, y.shape))
+    else:
+        y = jnp.round(y)
+    q = jnp.clip(y, -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array, dtype=jnp.float32):
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def topk_sparsify(x: jax.Array, density: float):
+    """Keep the k = density * n largest-|.| entries (flattened)."""
+    flat = x.reshape(-1).astype(jnp.float32)
+    k = max(1, int(flat.shape[0] * density))
+    _, idx = jax.lax.top_k(jnp.abs(flat), k)
+    vals = flat[idx]
+    kept = jnp.zeros_like(flat).at[idx].set(vals)
+    return kept.reshape(x.shape), (idx, vals)
+
+
+def compress_grads(grads, state: CompressionState, scheme: str,
+                   density: float = 0.01, key=None):
+    """Returns (wire_grads, new_state, wire_bytes_estimate)."""
+    if scheme == "none":
+        size = sum(g.size * g.dtype.itemsize
+                   for g in jax.tree.leaves(grads))
+        return grads, state, size
+    if scheme == "int8":
+        leaves, treedef = jax.tree.flatten(grads)
+        keys = (jax.random.split(key, len(leaves)) if key is not None
+                else [None] * len(leaves))
+        out = []
+        wire = 0
+        for g, k in zip(leaves, keys):
+            q, s = quantize_int8(g, k)
+            out.append(dequantize_int8(q, s, g.dtype))
+            wire += q.size + 4
+        return jax.tree.unflatten(treedef, out), state, wire
+    if scheme == "topk":
+        leaves, treedef = jax.tree.flatten(grads)
+        res_leaves = jax.tree.leaves(state.residual)
+        out, new_res = [], []
+        wire = 0
+        for g, r in zip(leaves, res_leaves):
+            acc = g.astype(jnp.float32) + r
+            kept, (idx, vals) = topk_sparsify(acc, density)
+            new_res.append(acc - kept)           # error feedback
+            out.append(kept.astype(g.dtype))
+            wire += idx.size * 4 + vals.size * 4
+        return (jax.tree.unflatten(treedef, out),
+                CompressionState(jax.tree.unflatten(treedef, new_res)),
+                wire)
+    raise ValueError(f"unknown compression scheme {scheme}")

@@ -1,0 +1,78 @@
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def tc_oracle(edges) -> set:
+    """Pure-python transitive closure oracle."""
+    tc = set(map(tuple, edges))
+    while True:
+        new = {(a, d) for (a, b) in tc for (c, d) in tc if b == c} | tc
+        if new == tc:
+            return tc
+        tc = new
+
+
+def reach_oracle(edges, sources) -> set:
+    adj = {}
+    for a, b in edges:
+        adj.setdefault(a, set()).add(b)
+    seen = set(sources)
+    frontier = set(sources)
+    while frontier:
+        nxt = set()
+        for v in frontier:
+            nxt |= adj.get(v, set()) - seen
+        seen |= nxt
+        frontier = nxt
+    return seen
+
+
+def cc_oracle(edges) -> dict:
+    """Undirected connected components: node -> min label."""
+    import collections
+    adj = collections.defaultdict(set)
+    nodes = set()
+    for a, b in edges:
+        adj[a].add(b)
+        adj[b].add(a)
+        nodes |= {a, b}
+    label = {}
+    for start in sorted(nodes):
+        if start in label:
+            continue
+        comp = {start}
+        stack = [start]
+        while stack:
+            v = stack.pop()
+            for w in adj[v]:
+                if w not in comp:
+                    comp.add(w)
+                    stack.append(w)
+        m = min(comp)
+        for v in comp:
+            label[v] = m
+    return label
+
+
+def sssp_oracle(edges, source) -> dict:
+    import heapq
+    adj = {}
+    for a, b, w in edges:
+        adj.setdefault(a, []).append((b, w))
+    dist = {source: 0}
+    pq = [(0, source)]
+    while pq:
+        d, v = heapq.heappop(pq)
+        if d > dist.get(v, float("inf")):
+            continue
+        for w, c in adj.get(v, []):
+            nd = d + c
+            if nd < dist.get(w, float("inf")):
+                dist[w] = nd
+                heapq.heappush(pq, (nd, w))
+    return dist

@@ -1,0 +1,94 @@
+"""Front-end tests: parser, AST safety checks, stratification."""
+import pytest
+
+from repro.core.datalog import parse_program, parse_rule, stratify
+from repro.core.datalog.ast import Aggregate, BinExpr, Const, Var
+
+
+def test_parse_basic_program():
+    p = parse_program("""
+    .decl edge(x: number, y: number)
+    .input edge
+    .output reach
+    reach(x) :- target(x).
+    reach(x) :- edge(x, y), edge(y, z), reach(z).
+    """)
+    assert p.declarations["edge"] == 2
+    assert "edge" in p.inputs
+    assert "reach" in p.outputs
+    assert len(p.rules) == 2
+    assert p.idbs == {"reach"}
+    assert "edge" in p.edbs and "target" in p.edbs
+
+
+def test_parse_negation_comparison_consts():
+    r = parse_rule("q(x) :- e(x, 5), !b(x), x != 3, x <= 9.")
+    assert r.negative_body[0].name == "b"
+    assert len(r.comparisons) == 2
+    assert r.positive_body[0].args[1] == Const(5)
+
+
+def test_parse_aggregates_and_arith():
+    r = parse_rule("d(y, MIN(d + c)) :- d(x, d), e(x, y, c).")
+    agg = r.aggregates[0]
+    assert agg.func == "MIN"
+    assert isinstance(agg.var, BinExpr)
+    assert agg.var.var_names == {"d", "c"}
+    r2 = parse_rule("cc(x, MIN(0)) :- s(x).")
+    assert isinstance(r2.aggregates[0].var, Const)
+
+
+def test_parse_wildcards_fresh():
+    r = parse_rule("p(x) :- e(x, _), e(_, x).")
+    names = [a.name for atom in r.body for a in atom.args]
+    anon = [n for n in names if n.startswith("__any")]
+    assert len(set(anon)) == 2  # distinct wildcards
+
+
+def test_ground_fact():
+    p = parse_program("f(1, 2).\nf(3, 4).\ng(x) :- f(x, _).")
+    facts = [r for r in p.rules if not r.body]
+    assert len(facts) == 2
+
+
+def test_unsafe_rule_rejected():
+    with pytest.raises(ValueError, match="unsafe"):
+        parse_program("q(x, y) :- e(x).")
+    with pytest.raises(ValueError, match="unsafe negation"):
+        parse_program("q(x) :- e(x), !b(x, z).")
+
+
+def test_unstratifiable_rejected():
+    with pytest.raises(ValueError, match="not stratifiable"):
+        prog = parse_program("p(x) :- e(x), !q(x).\nq(x) :- e(x), !p(x).")
+        stratify(prog)
+
+
+def test_stratification_order():
+    p = parse_program("""
+    a(x) :- e(x).
+    b(x) :- a(x), b0(x).
+    b(x) :- b(x), e(x).
+    c(x) :- b(x), !a(x).
+    """)
+    strata = stratify(p)
+    order = {name: s.index for s in strata for name in s.idbs}
+    assert order["a"] < order["b"] < order["c"]
+    rec = {name: s.recursive for s in strata for name in s.idbs}
+    assert not rec["a"] and rec["b"] and not rec["c"]
+
+
+def test_mutual_recursion_same_stratum():
+    p = parse_program("""
+    p(x,z) :- q(x,z).
+    q(x,z) :- p(x,y), e(y,z).
+    p(x,z) :- e(x,z).
+    """)
+    strata = stratify(p)
+    joint = [s for s in strata if {"p", "q"} <= set(s.idbs)]
+    assert len(joint) == 1 and joint[0].recursive
+
+
+def test_arity_mismatch_rejected():
+    with pytest.raises(ValueError, match="arity"):
+        parse_program("p(x) :- e(x, y).\np(x, y) :- e(x, y).")

@@ -1,0 +1,153 @@
+"""Per-kernel allclose sweeps: Pallas (interpret=True) vs pure-jnp refs,
+across shapes and dtypes."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+# -- segment_reduce -----------------------------------------------------------
+
+@pytest.mark.parametrize("n,d,num_segments", [
+    (64, 8, 16), (200, 16, 50), (1024, 128, 128),
+    (513, 4, 100),                       # non-multiple of block
+    (128, 8, 9000),                      # forces the tiled (large-N) path
+    (2048, 8, 10000),
+])
+@pytest.mark.parametrize("op", ["sum", "min", "max"])
+def test_segment_reduce_sweep(rng, n, d, num_segments, op):
+    segs = np.sort(rng.integers(0, num_segments, size=n)).astype(np.int32)
+    vals = rng.normal(size=(n, d)).astype(np.float32)
+    got = ops.segment_reduce(
+        jnp.asarray(vals), jnp.asarray(segs), num_segments, op,
+        backend="interpret", rows_block=128, seg_tile=512)
+    want = ref.segment_reduce_ref(
+        jnp.asarray(vals), jnp.asarray(segs), num_segments, op)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_segment_reduce_out_of_range_dropped(rng):
+    segs = jnp.array([0, 0, 1, 5, 99], jnp.int32)   # 99 out of range
+    vals = jnp.ones((5, 4), jnp.float32)
+    got = ops.segment_reduce(vals, segs, 8, "sum", backend="interpret")
+    want = ref.segment_reduce_ref(vals, segs, 8, "sum")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+
+
+def test_segment_reduce_1d(rng):
+    segs = jnp.asarray(np.sort(rng.integers(0, 10, size=50)), jnp.int32)
+    vals = jnp.asarray(rng.normal(size=50), jnp.float32)
+    got = ops.segment_reduce(vals, segs, 10, "sum", backend="interpret")
+    want = ref.segment_reduce_ref(vals, segs, 10, "sum")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+# -- merge_probe --------------------------------------------------------------
+
+@pytest.mark.parametrize("m,n", [(100, 50), (1024, 1024), (37, 2000),
+                                 (5000, 333), (1, 1)])
+def test_merge_probe_sweep(rng, m, n):
+    build = np.sort(rng.integers(0, 1 << 40, size=m)).astype(np.int64)
+    probe = np.sort(np.concatenate([
+        rng.choice(build, size=min(n // 2, m)),
+        rng.integers(0, 1 << 40, size=n - min(n // 2, m)),
+    ])).astype(np.int64)
+    lo, hi = ops.merge_probe_counts(
+        jnp.asarray(build), jnp.asarray(probe), backend="interpret",
+        probe_block=128, build_block=256)
+    rlo, rhi = ref.merge_probe_ref(jnp.asarray(build), jnp.asarray(probe))
+    np.testing.assert_array_equal(np.asarray(lo), np.asarray(rlo))
+    np.testing.assert_array_equal(np.asarray(hi), np.asarray(rhi))
+
+
+def test_merge_probe_duplicates():
+    build = jnp.asarray(np.array([2, 2, 2, 5, 5, 9], np.int64))
+    probe = jnp.asarray(np.array([1, 2, 3, 5, 9, 10], np.int64))
+    lo, hi = ops.merge_probe_counts(build, probe, backend="interpret",
+                                    probe_block=8, build_block=8)
+    assert (hi - lo).tolist() == [0, 3, 0, 2, 1, 0]
+
+
+# -- fm_interaction -----------------------------------------------------------
+
+@pytest.mark.parametrize("b,f,k", [(32, 39, 10), (1000, 39, 10),
+                                   (4096, 26, 16), (7, 13, 4)])
+def test_fm_interaction_sweep(rng, b, f, k):
+    x = rng.normal(size=(b, f)).astype(np.float32)
+    v = rng.normal(size=(f, k)).astype(np.float32)
+    got = ops.fm_interaction(jnp.asarray(x), jnp.asarray(v),
+                             backend="interpret", batch_block=256)
+    want = ref.fm_interaction_ref(jnp.asarray(x), jnp.asarray(v))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_fm_matches_bruteforce(rng):
+    x = rng.normal(size=(4, 6)).astype(np.float32)
+    v = rng.normal(size=(6, 3)).astype(np.float32)
+    brute = np.zeros(4)
+    for i in range(6):
+        for j in range(i + 1, 6):
+            brute += (v[i] @ v[j]) * x[:, i] * x[:, j]
+    got = ops.fm_interaction(jnp.asarray(x), jnp.asarray(v),
+                             backend="interpret", batch_block=8)
+    np.testing.assert_allclose(np.asarray(got), brute, rtol=1e-4,
+                               atol=1e-5)
+
+
+# -- flash_attention ----------------------------------------------------------
+
+@pytest.mark.parametrize("b,hq,hkv,sq,skv,d", [
+    (1, 4, 4, 128, 128, 64),        # MHA square
+    (2, 8, 2, 128, 128, 64),        # GQA 4:1
+    (1, 4, 1, 64, 256, 64),         # MQA, sq < skv (chunked prefill)
+    (1, 16, 8, 256, 256, 32),       # GQA 2:1
+])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(rng, b, hq, hkv, sq, skv, d, causal, dtype):
+    q = jnp.asarray(rng.normal(size=(b, hq, sq, d)), dtype)
+    k = jnp.asarray(rng.normal(size=(b, hkv, skv, d)), dtype)
+    v = jnp.asarray(rng.normal(size=(b, hkv, skv, d)), dtype)
+    got = ops.flash_attention(q, k, v, causal=causal, backend="interpret",
+                              q_block=64, kv_block=64)
+    want = ref.attention_ref(q, k, v, causal=causal)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=tol, atol=tol)
+
+
+# -- flash_decode -------------------------------------------------------------
+
+@pytest.mark.parametrize("b,hq,hkv,S,d", [
+    (2, 4, 4, 512, 64), (1, 8, 2, 1024, 64), (3, 16, 8, 256, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_decode_sweep(rng, b, hq, hkv, S, d, dtype):
+    q = jnp.asarray(rng.normal(size=(b, hq, d)), dtype)
+    k = jnp.asarray(rng.normal(size=(b, hkv, S, d)), dtype)
+    v = jnp.asarray(rng.normal(size=(b, hkv, S, d)), dtype)
+    kv_len = jnp.asarray(rng.integers(1, S, size=(b,)), jnp.int32)
+    got = ops.flash_decode(q, k, v, kv_len, backend="interpret",
+                           kv_block=128)
+    want = ref.decode_attention_ref(q, k, v, kv_len)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=tol, atol=tol)
+
+
+def test_flash_decode_full_cache(rng):
+    q = jnp.asarray(rng.normal(size=(1, 4, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 4, 256, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 4, 256, 64)), jnp.float32)
+    got = ops.flash_decode(q, k, v, 256, backend="interpret")
+    want = ref.decode_attention_ref(q, k, v, 256)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)

