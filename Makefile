@@ -1,0 +1,16 @@
+# Test tiers (see pytest.ini for the `slow` marker):
+#   test-fast — everything except the per-architecture smoke tests
+#               (~2-3 min; the CI push tier)
+#   test      — the full tier-1 command from ROADMAP.md (~4.5 min)
+PYTEST = PYTHONPATH=src python -m pytest
+
+.PHONY: test test-fast bench-backends
+
+test:
+	$(PYTEST) -x -q
+
+test-fast:
+	$(PYTEST) -x -q -m "not slow"
+
+bench-backends:
+	PYTHONPATH=src python -m benchmarks.run --only backends

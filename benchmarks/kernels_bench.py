@@ -1,6 +1,10 @@
-"""Kernel micro-benchmarks: XLA reference path wall-times on this CPU
-(relative scaling only — Pallas kernels target TPU and are validated in
-interpret mode, not timed here)."""
+"""Kernel micro-benchmarks (XLA reference path wall-times on this CPU;
+relative scaling only — Pallas kernels target TPU and are validated in
+interpret mode) plus end-to-end fixpoint benchmarks per kernel backend:
+the same Datalog programs run under ``kernel_backend="jnp"`` and
+``"pallas"`` so the dispatch layer's effect is measured through the
+whole semi-naive loop, not per kernel. On CPU the pallas rows time
+interpret mode — a correctness/lowering proxy, not the TPU speedup."""
 from __future__ import annotations
 
 import time
@@ -53,4 +57,42 @@ def bench() -> list[dict]:
     f = jax.jit(lambda q, k, v: ops.flash_attention(q, k, v))
     rows.append({"table": "kernels", "name": "attention_512_xla",
                  "us_per_call": round(_time(f, q, k, k), 1)})
+    return rows
+
+
+def bench_fixpoint_backends(repeats: int = 3) -> list[dict]:
+    """End-to-end fixpoint wall time per kernel backend (ISSUE 1): one
+    row per (program, backend), identical inputs, jnp vs pallas.
+    TC/Reach hammer the join probe every iteration, Degree the segment
+    reduce."""
+    from benchmarks.programs import DEGREE, REACH, TC
+    from repro.core.optimizer import compile_program
+    from repro.engine import Engine, EngineConfig
+
+    rng = np.random.default_rng(0)
+    progs = {
+        "TC": (TC, {"edge": rng.integers(0, 64, size=(220, 2))}),
+        "Reach": (REACH, {"edge": rng.integers(0, 400, size=(1600, 2)),
+                          "source": np.array([[0]])}),
+        "Degree": (DEGREE,
+                   {"edge": rng.integers(0, 256, size=(2000, 2))}),
+    }
+    rows = []
+    for pname, (src, edbs) in progs.items():
+        compiled = compile_program(src)
+        for backend in ("jnp", "pallas"):
+            eng = Engine(compiled, EngineConfig(
+                idb_cap=1 << 13, intermediate_cap=1 << 15,
+                kernel_backend=backend))
+            best, iters = float("inf"), 0
+            for _ in range(repeats):
+                out, stats = eng.run({k: v.copy()
+                                      for k, v in edbs.items()})
+                best = min(best, stats.wall_s)
+                iters = stats.total_iterations
+            rows.append({
+                "table": "backends", "program": pname,
+                "backend": eng.backend.name, "wall_s": round(best, 4),
+                "us_per_call": round(best * 1e6, 1), "iters": iters,
+                "facts": int(sum(stats.total_facts.values()))})
     return rows

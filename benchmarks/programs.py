@@ -90,6 +90,14 @@ p(x,z) :- e(x,z).
 p(x,z) :- c(y,w,z), p(x,w), p(x,y).
 """
 
+# nonrecursive grouped aggregation — exercises the segment-reduce
+# dispatch path (backend equivalence tests + backend benchmarks)
+DEGREE = """
+.input edge
+.output deg
+deg(x, COUNT(y)) :- edge(x, y).
+"""
+
 
 def make_datasets(scale: float = 1.0, seed: int = 0) -> dict:
     """Synthetic datasets per program; `scale` grows sizes."""

@@ -12,7 +12,7 @@ import json
 from pathlib import Path
 
 ALL_TABLES = ("table1", "seminaive", "robustness", "specialization",
-              "incremental", "kernels", "roofline")
+              "incremental", "kernels", "backends", "roofline")
 
 
 def collect(only=None) -> list[dict]:
@@ -37,6 +37,9 @@ def collect(only=None) -> list[dict]:
     if "kernels" in only:
         from benchmarks.kernels_bench import bench
         rows += bench()
+    if "backends" in only:
+        from benchmarks.kernels_bench import bench_fixpoint_backends
+        rows += bench_fixpoint_backends()
     if "roofline" in only:
         from benchmarks.roofline import rows as roof_rows
         try:
@@ -60,7 +63,7 @@ def main() -> None:
         name = "/".join(str(r.get(k)) for k in
                         ("table", "program", "arch", "name", "rule",
                          "shape", "setting", "order", "update_size",
-                         "kind") if r.get(k) is not None)
+                         "kind", "backend") if r.get(k) is not None)
         us = r.get("us_per_call")
         if us is None:
             for k in ("flowlog_s", "incremental_s", "presence_s",

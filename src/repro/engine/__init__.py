@@ -2,10 +2,15 @@ from repro.engine.semiring import (
     PRESENCE, COUNTING, MIN_MONOID, MAX_MONOID, Semiring,
 )
 from repro.engine.relation import Relation, from_numpy, to_numpy
+from repro.engine.backend import (
+    JNP, JnpDispatch, KernelDispatch, PallasDispatch, resolve_backend,
+)
 from repro.engine.engine import Engine, EngineConfig, EngineStats
 
 __all__ = [
     "PRESENCE", "COUNTING", "MIN_MONOID", "MAX_MONOID", "Semiring",
     "Relation", "from_numpy", "to_numpy",
+    "JNP", "JnpDispatch", "KernelDispatch", "PallasDispatch",
+    "resolve_backend",
     "Engine", "EngineConfig", "EngineStats",
 ]

@@ -1,0 +1,163 @@
+"""Kernel-dispatch layer — the seam between the engine's logical
+operators (relops.py) and their physical implementations.
+
+FlowLog's logical/physical split (paper Sec. 2) says the executor should
+be free to swap "off-the-shelf database primitives" under the Datalog
+optimizer. Concretely, two primitives dominate the fixpoint hot path:
+
+  probe(build, probe) -> (lo, hi)
+      The count/locate phase of the sort-merge join: for every probe key
+      (packed row key — up to 63 bits — int64, sorted ascending, dead
+      rows = KEY_PAD) its lower/upper rank in the sorted build keys.
+      Serves ``relops.join`` and the lattice lookup of
+      ``relops.merge_with_delta``.
+
+  segment_reduce(values, seg_ids, num_segments, op) -> [num_segments]
+      Sorted-segment aggregation (op in sum/min/max) behind
+      ``relops.reduce_groups`` (Datalog COUNT/SUM/MIN/MAX).
+
+A ``KernelDispatch`` bundles one implementation of each. Two are
+provided:
+
+  * ``JnpDispatch``    — pure jnp (``searchsorted`` / ``jax.ops.segment_*``):
+    the XLA fallback, also what the dry-run lowers so cost analysis sees
+    plain XLA ops.
+  * ``PallasDispatch`` — the TPU Pallas kernels in ``repro.kernels``
+    (``merge_probe_counts`` blocked merge-path probe,
+    ``segment_reduce`` one-hot-matmul segment reduction), run in
+    interpret mode when no TPU is attached so CPU CI validates the
+    exact kernel bodies that deploy.
+
+Selection happens ONCE at engine construction from
+``EngineConfig.kernel_backend``:
+
+  "auto"   -> "pallas" on TPU, "jnp" otherwise (interpret mode is a
+              validation tool, not a fast CPU path)
+  "pallas" -> compiled kernels on TPU, interpret mode elsewhere
+  "jnp"    -> pure-jnp everywhere
+
+Contracts the dispatch boundary guarantees (and the equivalence tests
+in tests/test_backend_equivalence.py pin down):
+
+  * ``lo`` ranks are identical to ``searchsorted(..., 'left')`` for all
+    probe keys, including KEY_PAD; ``hi`` ranks are identical to
+    ``searchsorted(..., 'right')`` for every *live* probe key. For a
+    KEY_PAD probe the Pallas kernel's ``hi`` may additionally count its
+    own block padding — relops masks dead-probe counts to zero, so this
+    never reaches a result.
+  * integer segment reductions accumulate natively in int32 inside the
+    kernel — no float32 rounding; sums past 2**31 - 1 wrap exactly
+    like ``jax.ops.segment_sum`` does — with the same empty-segment
+    identities as ``jax.ops.segment_min/max``, so both backends emit
+    byte-identical relations.
+
+Ops NOT yet dispatched (still pure jnp, candidates for future kernels):
+``membership`` (semijoin/antijoin/difference — probe side is unsorted
+there), ``dedupe``'s duplicate-combine, and the bounded expand of
+``join``. See ROADMAP "Open items".
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+class KernelDispatch:
+    """Injected probe/reduce implementations for the engine hot path.
+
+    Instances are Python-level configuration (closed over by the jitted
+    iteration body), never traced values; methods must be traceable.
+    """
+
+    name = "abstract"
+
+    def probe(self, build_keys: jax.Array, probe_keys: jax.Array):
+        """(lo, hi) int32 ranks of sorted int64 probe keys in sorted
+        int64 build keys (see module docstring for the PAD contract)."""
+        raise NotImplementedError
+
+    def probe_lo(self, build_keys: jax.Array, probe_keys: jax.Array):
+        """Lower rank only (merge_with_delta's lattice lookup needs no
+        hi). Default derives from ``probe``; backends whose lo-only
+        form is cheaper override it."""
+        return self.probe(build_keys, probe_keys)[0]
+
+    def segment_reduce(self, values: jax.Array, seg_ids: jax.Array,
+                       num_segments: int, op: str) -> jax.Array:
+        """Reduce ``values`` [n] over sorted ``seg_ids`` (out-of-range
+        ids dropped) with op in {"sum", "min", "max"}."""
+        raise NotImplementedError
+
+    def __repr__(self):
+        return f"<KernelDispatch {self.name}>"
+
+
+class JnpDispatch(KernelDispatch):
+    """Pure-jnp implementations — the portable XLA fallback."""
+
+    name = "jnp"
+
+    def probe(self, build_keys, probe_keys):
+        lo, hi = ops.merge_probe_counts(build_keys, probe_keys,
+                                        backend="xla")
+        return lo.astype(jnp.int32), hi.astype(jnp.int32)
+
+    def probe_lo(self, build_keys, probe_keys):
+        # one searchsorted pass, not two (matters when jit is off;
+        # under jit XLA would DCE the unused hi anyway)
+        return jnp.searchsorted(build_keys, probe_keys,
+                                side="left").astype(jnp.int32)
+
+    def segment_reduce(self, values, seg_ids, num_segments, op):
+        return ops.segment_reduce(values, seg_ids, num_segments, op,
+                                  backend="xla")
+
+
+class PallasDispatch(KernelDispatch):
+    """Routes to the Pallas kernels (compiled on TPU, interpret mode on
+    CPU so tests exercise the deployed kernel bodies)."""
+
+    def __init__(self, interpret: bool):
+        self.interpret = interpret
+        self.name = "pallas-interpret" if interpret else "pallas"
+        self._mode = "interpret" if interpret else "pallas"
+
+    def probe(self, build_keys, probe_keys):
+        return ops.merge_probe_counts(build_keys, probe_keys,
+                                      backend=self._mode)
+
+    def segment_reduce(self, values, seg_ids, num_segments, op):
+        # The kernel accumulates integer inputs natively in int32
+        # (exact; a float32 accumulator would round above 2**24) with
+        # the same empty-segment identities as jax.ops.segment_*, so
+        # no post-processing is needed for bit-equality.
+        return ops.segment_reduce(values, seg_ids, num_segments, op,
+                                  backend=self._mode)
+
+
+JNP = JnpDispatch()
+
+_CHOICES = ("auto", "pallas", "pallas-interpret", "jnp")
+
+
+def resolve_backend(spec: "str | KernelDispatch | None" = "auto",
+                    ) -> KernelDispatch:
+    """Resolve an ``EngineConfig.kernel_backend`` spec to a dispatch
+    object. Called once at engine construction — never per-op."""
+    if spec is None:
+        spec = "auto"
+    if isinstance(spec, KernelDispatch):
+        return spec
+    on_tpu = jax.default_backend() == "tpu"
+    if spec == "auto":
+        spec = "pallas" if on_tpu else "jnp"
+    if spec == "jnp":
+        return JNP
+    if spec == "pallas":
+        return PallasDispatch(interpret=not on_tpu)
+    if spec == "pallas-interpret":
+        return PallasDispatch(interpret=True)
+    raise ValueError(
+        f"kernel_backend={spec!r}: expected one of {_CHOICES}")

@@ -29,6 +29,7 @@ import numpy as np
 
 from repro.core import ir as I
 from repro.engine import relops as R
+from repro.engine.backend import KernelDispatch, resolve_backend
 from repro.engine.lower import Env, Evaluator, LowerConfig
 from repro.engine.relation import (
     PAD, Relation, empty, from_numpy, live_mask, to_numpy,
@@ -50,6 +51,11 @@ class EngineConfig:
     max_grow_retries: int = 8
     semiring: Semiring = PRESENCE  # execution algebra (Sec. 8)
     jit: bool = True
+    # physical backend for probe/reduce hot ops (engine/backend.py):
+    # "auto" (Pallas on TPU, jnp elsewhere) | "pallas" | "jnp";
+    # a KernelDispatch instance is also accepted. Resolved once at
+    # engine construction.
+    kernel_backend: str = "auto"
 
 
 @dataclass
@@ -76,6 +82,8 @@ class Engine:
                  config: EngineConfig | None = None):
         self.compiled = compiled
         self.cfg = config or EngineConfig()
+        self.backend: KernelDispatch = resolve_backend(
+            self.cfg.kernel_backend)
         self.monoid: dict[str, tuple[Semiring, int]] = {}
         for name, (func, vpos) in compiled.monoid_idbs.items():
             self.monoid[name] = (monoid_for(func), vpos)
@@ -151,7 +159,8 @@ class Engine:
                      stratum_key, init_state=None):
         base_env_rels = env_rels
         cfg = self.cfg
-        lcfg = LowerConfig(cfg.intermediate_cap, cfg.semiring)
+        lcfg = LowerConfig(cfg.intermediate_cap, cfg.semiring,
+                           self.backend)
         ev = Evaluator(lcfg)
         monoid_names = set(self.monoid)
 
@@ -192,7 +201,8 @@ class Engine:
                 if name in derived:
                     sr = self._sr_of(name)
                     full0, delta0, ov = R.merge_with_delta(
-                        full0, derived[name], sr, self._idb_cap(name))
+                        full0, derived[name], sr, self._idb_cap(name),
+                        backend=self.backend)
                     env.overflow = env.overflow | ov
                 else:
                     delta0 = full0
@@ -211,7 +221,8 @@ class Engine:
                         state[name] = (full, self._empty_idb(name))
                     else:
                         nf, nd, ov = R.merge_with_delta(
-                            full, seed, sr, self._idb_cap(name))
+                            full, seed, sr, self._idb_cap(name),
+                            backend=self.backend)
                         ovf |= ov
                         state[name] = (nf, nd)
                 return state, ovf
@@ -250,7 +261,8 @@ class Engine:
                 full_new = env_rels[(name, I.FULL_NEW)]
                 if name in derived:
                     nf, nd, ov = R.merge_with_delta(
-                        full_new, derived[name], sr, self._idb_cap(name))
+                        full_new, derived[name], sr, self._idb_cap(name),
+                        backend=self.backend)
                     ovf |= ov
                 else:
                     nf = full_new

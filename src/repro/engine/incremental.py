@@ -265,7 +265,8 @@ class IncrementalEngine:
         changed EDB occurrences because lower strata were updated first
         and their deltas folded into CHANGED entries."""
         lcfg = LowerConfig(self.engine.cfg.intermediate_cap,
-                           self.engine.cfg.semiring)
+                           self.engine.cfg.semiring,
+                           self.engine.backend)
         ev = Evaluator(lcfg)
         rels = dict(env_rels)
         for name, rel in changed_rows.items():
@@ -346,7 +347,8 @@ class IncrementalEngine:
         #    through the standard fixpoint continuation.
         rederive: dict[str, Relation] = {}
         lcfg = LowerConfig(self.engine.cfg.intermediate_cap,
-                           self.engine.cfg.semiring)
+                           self.engine.cfg.semiring,
+                           self.engine.backend)
         ev = Evaluator(lcfg)
         env = Env(dict(self._env), self.compiled.shared,
                   set(self.engine.monoid))

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 
 from repro.core import ir as I
 from repro.engine import relops as R
+from repro.engine.backend import KernelDispatch
 from repro.engine.relation import PAD, Relation, live_mask
 from repro.engine.semiring import PRESENCE, Semiring
 
@@ -27,6 +28,8 @@ class LowerConfig:
     intermediate_cap: int = 1 << 15
     # execution algebra for row diffs: PRESENCE (batch) or COUNTING
     semiring: Semiring = PRESENCE
+    # kernel dispatch for probe/reduce hot ops (backend.py); None = jnp
+    backend: Optional[KernelDispatch] = None
 
 
 class Env:
@@ -180,7 +183,8 @@ class Evaluator:
                       if i not in set(r_keys))
         data, val, valid, total, ovj = R.join(
             left, right, l_keys, r_keys, l_out, r_out,
-            self.cfg.semiring, self._join_cap())
+            self.cfg.semiring, self._join_cap(),
+            backend=self.cfg.backend)
         # joined loose schema: left schema ++ right schema minus key dups
         joined_names: dict[str, int] = {}
         w = 0
@@ -257,7 +261,8 @@ class Evaluator:
         group_cols = tuple(cols[g] for g in node.group)
         agg_specs = tuple((f, cols[c]) for f, c in node.aggs)
         reduced, ov = R.reduce_groups(
-            child, group_cols, agg_specs, child.capacity)
+            child, group_cols, agg_specs, child.capacity,
+            backend=self.cfg.backend)
         # reduce_groups emits [group..., aggs...]; permute to node.schema
         perm = []
         gi, ai = 0, 0

@@ -6,6 +6,12 @@ bounded data-dependent output may have been truncated. Ops are pure and
 shape-static, so the whole iteration body fuses under jit, and the same
 code lowers under pjit/shard_map for scale-out (DESIGN.md §7).
 
+Hot physical primitives (the join's count/locate probe, the
+merge_with_delta lattice lookup, and grouped segment aggregation) are
+not hard-coded: ops take an injected ``KernelDispatch``
+(engine/backend.py) that routes them to the Pallas TPU kernels or the
+pure-jnp fallback. ``backend=None`` means jnp.
+
 Correspondence to DD operators (paper Sec. 2.3):
     arrange        -> ``arrange`` (sort by join-key prefix)
     join_core      -> ``join`` (sort-merge: searchsorted + bounded expand)
@@ -23,6 +29,7 @@ from typing import Optional, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.engine.backend import JNP, KernelDispatch
 from repro.engine.relation import (
     KEY_PAD, PAD, Relation, lex_order, live_mask, pack_columns,
     rows_equal_prev,
@@ -38,9 +45,8 @@ def _scatter_compact(data, val, keep, out_cap, val_identity):
     """Stable compaction: keep[i] rows move to positions cumsum-1; result
     preserves input order. Returns (data, val, n, overflow)."""
     pos = jnp.cumsum(keep.astype(jnp.int32)) - 1
-    n = jnp.maximum(pos[-1] + 1, 0).astype(jnp.int32) if keep.shape[0] else (
-        jnp.zeros((), jnp.int32))
-    n = jnp.where(keep.any(), pos[-1] + 1, 0).astype(jnp.int32)
+    n = jnp.where(keep.any(), pos[-1] + 1, 0).astype(jnp.int32) if (
+        keep.shape[0]) else jnp.zeros((), jnp.int32)
     overflow = n > out_cap
     tgt = jnp.where(keep, pos, out_cap)  # out-of-bounds -> dropped
     out = jnp.full((out_cap, data.shape[1]), PAD, jnp.int32)
@@ -123,17 +129,24 @@ def join(left: Relation, right: Relation,
          l_keys: tuple[int, ...], r_keys: tuple[int, ...],
          l_out: tuple[int, ...], r_out: tuple[int, ...],
          sr: Semiring, out_cap: int,
-         arranged: bool = False):
+         arranged: bool = False,
+         backend: Optional[KernelDispatch] = None):
     """Sort-merge inner join. Output columns = left[l_out] ++ right[r_out]
     (unsorted; callers dedupe/arrange downstream). Returns
     (data, val, valid_mask, total, overflow) — 'loose rows', so fused
-    consumers (Join-FlatMap) can filter/project before compaction."""
+    consumers (Join-FlatMap) can filter/project before compaction.
+
+    The count/locate phase (probe ranks) goes through the injected
+    ``backend`` (backend.py): both sides are arrangements, so the packed
+    key arrays are sorted and the blocked Pallas merge-path probe
+    applies. The bounded expand stays jnp."""
+    bk = backend or JNP
     if not arranged:
         left = arrange(left, l_keys)
         right = arrange(right, r_keys)
     lk = pack_columns(left.data, l_keys, live_mask(left))
     rk = pack_columns(right.data, r_keys, live_mask(right))
-    lo, hi = _searchsorted(rk, lk)
+    lo, hi = bk.probe(rk, lk)
     counts = jnp.where(live_mask(left), hi - lo, 0)
     offsets = jnp.cumsum(counts)
     li, within, valid, total = expand_indices(counts, offsets, out_cap)
@@ -217,7 +230,8 @@ def merge(full: Relation, delta: Relation, sr: Semiring, out_cap: int):
 
 
 def merge_with_delta(full: Relation, derived: Relation, sr: Semiring,
-                     out_cap: int):
+                     out_cap: int,
+                     backend: Optional[KernelDispatch] = None):
     """Merge ``derived`` into ``full``; return (new_full, new_delta, ovf).
 
     PRESENCE: delta = derived rows not already in full (set difference).
@@ -229,11 +243,14 @@ def merge_with_delta(full: Relation, derived: Relation, sr: Semiring,
     if not sr.has_value:
         delta, ov2 = difference(derived, full)
         return new_full, delta, ov1 | ov2
-    # lattice: look up each new_full row's key in old full, compare values
+    # lattice: look up each new_full row's key in old full, compare
+    # values. Both arrays are sorted arrangements, so the lookup is a
+    # probe (lo rank only) and dispatches like the join's locate phase.
+    bk = backend or JNP
     cols = tuple(range(full.arity))
     fk = pack_columns(full.data, cols, live_mask(full))
     nk = pack_columns(new_full.data, cols, live_mask(new_full))
-    lo = jnp.searchsorted(fk, nk, side="left")
+    lo = bk.probe_lo(fk, nk)
     found = (jnp.take(fk, lo, mode="clip") == nk) & (nk != KEY_PAD)
     old_val = jnp.where(found, jnp.take(full.val, lo, mode="clip"),
                         sr.identity)
@@ -245,10 +262,16 @@ def merge_with_delta(full: Relation, derived: Relation, sr: Semiring,
 
 
 def reduce_groups(rel: Relation, group_cols: tuple[int, ...],
-                  aggs: tuple[tuple[str, int], ...], out_cap: int):
+                  aggs: tuple[tuple[str, int], ...], out_cap: int,
+                  backend: Optional[KernelDispatch] = None):
     """Stratified grouped aggregation: sort by group key, segment-reduce.
     Output data columns = group_cols ++ one column per agg. COUNT counts
-    *distinct* tuples (set semantics, matching Datalog COUNT(y))."""
+    *distinct* tuples (set semantics, matching Datalog COUNT(y)).
+
+    The segment reduction dispatches through ``backend`` — segment ids
+    are sorted ascending by construction (rows are arranged by group
+    key), which is exactly the Pallas kernel's contract."""
+    bk = backend or JNP
     r = arrange(rel, group_cols)
     live = live_mask(r)
     gkey = pack_columns(r.data, group_cols, live)
@@ -260,19 +283,18 @@ def reduce_groups(rel: Relation, group_cols: tuple[int, ...],
     for func, col in aggs:
         x = r.data[:, col]
         if func == "COUNT":
-            res = jax.ops.segment_sum(
-                jnp.ones_like(x), seg, num_segments=r.capacity)
+            res = bk.segment_reduce(jnp.ones_like(x), seg, r.capacity,
+                                    "sum")
         elif func == "SUM":
-            res = jax.ops.segment_sum(x, seg, num_segments=r.capacity)
+            res = bk.segment_reduce(x, seg, r.capacity, "sum")
         elif func == "MIN":
-            res = jax.ops.segment_min(x, seg, num_segments=r.capacity)
+            res = bk.segment_reduce(x, seg, r.capacity, "min")
         elif func == "MAX":
-            res = jax.ops.segment_max(x, seg, num_segments=r.capacity)
+            res = bk.segment_reduce(x, seg, r.capacity, "max")
         else:
             raise ValueError(func)
         outs.append(res)
     ngroups = jnp.sum(first.astype(jnp.int32))
-    gdata = jnp.compress  # placeholder to appease linters; not used
     # first-row group tuples, compacted
     gcols = r.data[:, jnp.array(group_cols)] if group_cols else jnp.zeros(
         (r.capacity, 0), jnp.int32)

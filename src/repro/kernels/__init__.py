@@ -19,6 +19,36 @@ Kernels:
   flash_attention — blocked online-softmax attention (causal/full, GQA)
                     for the LM architectures' train/prefill path.
   flash_decode    — split-KV decode attention for 32k..512k contexts.
+
+The engine backend seam
+-----------------------
+The Datalog engine consumes ``segment_reduce`` and
+``merge_probe_counts`` through the kernel-dispatch layer in
+``repro.engine.backend`` (selected by ``EngineConfig.kernel_backend``:
+"auto" | "pallas" | "jnp"), so these two kernels ARE the engine's
+physical execution backend on TPU rather than standalone demos:
+
+  merge_probe_counts — the count/locate phase of ``relops.join``
+                       (both sides are arrangements, so build and probe
+                       key arrays arrive sorted with KEY_PAD tails) and
+                       the lattice lookup of ``relops.merge_with_delta``
+                       (lo rank only). Packed row keys (up to 63 bits;
+                       3-column packs reach bit 62) split into an
+                       order-isomorphic int32 pair in-kernel; KEY_PAD
+                       maps to the max pair, so dead rows sort last on
+                       both sides.
+  segment_reduce     — the sorted-segment aggregation behind
+                       ``relops.reduce_groups`` (Datalog COUNT/SUM/
+                       MIN/MAX). Integer columns accumulate natively in
+                       int32 — no float32 rounding; overflow past
+                       2**31 - 1 wraps exactly like jax.ops.segment_sum
+                       — with the same empty-segment identities, so jnp
+                       and Pallas backends emit byte-identical
+                       relations (tests/test_backend_equivalence.py).
+
+Still jnp-only (future kernels plug into the same dispatch seam):
+``membership`` (semijoin/antijoin/difference — unsorted probe side),
+``dedupe``'s duplicate-combine, and the bounded expand inside ``join``.
 """
 from repro.kernels.ops import (
     segment_reduce, merge_probe_counts, fm_interaction, flash_attention,

@@ -18,8 +18,11 @@ the probe block's min contributes its full size (cheap add, no compare).
 Only the O(1) diagonal band of block pairs does real VPU compare work,
 so total compare volume is O(n * build_block), like a classic merge.
 
-TPU has no native int64: packed 62-bit engine keys are split into
-(hi, lo) 31-bit halves and compared lexicographically in-kernel.
+TPU has no native int64: packed engine keys (up to 63 bits — 3-column
+packs reach bit 62; KEY_PAD is 2**63 - 1) are split into an int32 pair
+(hi = bits 32..62; lo = bits 0..31 biased by -2**31 so signed order
+matches unsigned chunk order) and compared lexicographically in-kernel
+with plain signed compares.
 """
 from __future__ import annotations
 
@@ -87,9 +90,13 @@ def merge_probe_pallas(
     MAXK = jnp.iinfo(jnp.int64).max
 
     def split(k):
+        # order-isomorphic (hi, lo) int32 pair for any non-negative
+        # int64 key: hi = bits 32..62 (31 bits, fits non-negative
+        # int32), lo = bits 0..31 shifted by -2**31 so the kernel's
+        # signed lex compare ranks the 32-bit chunk correctly
         k = k.astype(jnp.int64)
-        return ((k >> 31) & 0x7FFFFFFF).astype(jnp.int32), (
-            k & 0x7FFFFFFF).astype(jnp.int32)
+        return (k >> 32).astype(jnp.int32), (
+            (k & 0xFFFFFFFF) - (1 << 31)).astype(jnp.int32)
 
     m_pad = pl.cdiv(max(m, 1), build_block) * build_block
     n_pad = pl.cdiv(max(n, 1), probe_block) * probe_block

@@ -32,9 +32,19 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-_NEUTRAL = {"sum": 0.0, "min": jnp.inf, "max": -jnp.inf}
-
 RESIDENT_MAX_SEGMENTS = 8192
+
+
+def _neutral(op: str, dtype):
+    """Identity element per (op, accumulator dtype). Integer min/max use
+    the iinfo extremes — identical to jax.ops.segment_min/max, so the
+    engine's integer aggregates are bit-equal across backends."""
+    if op == "sum":
+        return jnp.zeros((), dtype)
+    if jnp.issubdtype(dtype, jnp.integer):
+        info = jnp.iinfo(dtype)
+        return jnp.asarray(info.max if op == "min" else info.min, dtype)
+    return jnp.asarray(jnp.inf if op == "min" else -jnp.inf, dtype)
 
 
 def _resident_kernel(seg_ref, val_ref, out_ref, *, op: str):
@@ -42,22 +52,25 @@ def _resident_kernel(seg_ref, val_ref, out_ref, *, op: str):
 
     @pl.when(i == 0)
     def _init():
-        out_ref[...] = jnp.full_like(out_ref, _NEUTRAL[op])
+        out_ref[...] = jnp.full_like(
+            out_ref, _neutral(op, out_ref.dtype))
 
     seg = seg_ref[...]                        # [rows_block] int32
-    vals = val_ref[...]                       # [rows_block, d] f32
+    vals = val_ref[...]                       # [rows_block, d] f32/i32
     segs = out_ref.shape[0]
     onehot = seg[:, None] == jax.lax.broadcasted_iota(
         jnp.int32, (1, segs), 1)              # [rows, segs]
     if op == "sum":
+        # int32 accumulation stays int32 end-to-end (exact — the f32
+        # accumulator would round above 2**24); floats use the MXU.
         part = jax.lax.dot_general(
             onehot.astype(vals.dtype), vals,
             (((0,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)          # [segs, d]
+            preferred_element_type=out_ref.dtype)        # [segs, d]
         out_ref[...] += part
     else:
         sel = jnp.where(onehot[:, :, None], vals[:, None, :],
-                        _NEUTRAL[op])                    # [rows, segs, d]
+                        _neutral(op, vals.dtype))        # [rows, segs, d]
         part = sel.min(axis=0) if op == "min" else sel.max(axis=0)
         out_ref[...] = (jnp.minimum(out_ref[...], part) if op == "min"
                         else jnp.maximum(out_ref[...], part))
@@ -70,7 +83,8 @@ def _tiled_kernel(lo_ref, hi_ref, seg_ref, val_ref, out_ref, *, op: str,
 
     @pl.when(r == 0)
     def _init():
-        out_ref[...] = jnp.full_like(out_ref, _NEUTRAL[op])
+        out_ref[...] = jnp.full_like(
+            out_ref, _neutral(op, out_ref.dtype))
 
     base = s * seg_tile
     blk_lo = lo_ref[0]
@@ -87,11 +101,11 @@ def _tiled_kernel(lo_ref, hi_ref, seg_ref, val_ref, out_ref, *, op: str,
             part = jax.lax.dot_general(
                 onehot.astype(vals.dtype), vals,
                 (((0,), (0,)), ((), ())),
-                preferred_element_type=jnp.float32)
+                preferred_element_type=out_ref.dtype)
             out_ref[...] += part
         else:
             sel = jnp.where(onehot[:, :, None], vals[:, None, :],
-                            _NEUTRAL[op])
+                            _neutral(op, vals.dtype))
             part = sel.min(axis=0) if op == "min" else sel.max(axis=0)
             out_ref[...] = (
                 jnp.minimum(out_ref[...], part) if op == "min"
@@ -115,7 +129,11 @@ def segment_reduce_pallas(
     n, d = values.shape
     rows_block = min(rows_block, max(8, pl.next_power_of_2(n)))
     n_pad = pl.cdiv(n, rows_block) * rows_block
-    values = values.astype(jnp.float32)
+    # integer inputs accumulate in int32 (exact; the float32 path
+    # rounds above 2**24), everything else in float32
+    acc_dtype = (jnp.int32 if jnp.issubdtype(values.dtype, jnp.integer)
+                 else jnp.float32)
+    values = values.astype(acc_dtype)
     if n_pad != n:
         values = jnp.pad(values, ((0, n_pad - n), (0, 0)))
         seg_ids = jnp.pad(seg_ids, (0, n_pad - n), constant_values=-1)
@@ -134,7 +152,7 @@ def segment_reduce_pallas(
                 pl.BlockSpec((rows_block, d), lambda i: (i, 0)),
             ],
             out_specs=pl.BlockSpec((segs_p, d), lambda i: (0, 0)),
-            out_shape=jax.ShapeDtypeStruct((segs_p, d), jnp.float32),
+            out_shape=jax.ShapeDtypeStruct((segs_p, d), acc_dtype),
             interpret=interpret,
         )(ids, values)
         return out[:num_segments]
@@ -159,7 +177,7 @@ def segment_reduce_pallas(
             pl.BlockSpec((rows_block, d), lambda s, r: (r, 0)),
         ],
         out_specs=pl.BlockSpec((seg_tile, d), lambda s, r: (s, 0)),
-        out_shape=jax.ShapeDtypeStruct((segs_p, d), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((segs_p, d), acc_dtype),
         interpret=interpret,
     )(blk_lo, blk_hi, ids, values)
     return out[:num_segments]

@@ -16,7 +16,7 @@ import jax
 import numpy as np
 
 from repro.configs import ARCH_NAMES, get_arch
-from repro.launch.mesh import HARDWARE, make_production_mesh
+from repro.launch.mesh import HARDWARE, make_production_mesh, use_mesh
 
 _COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter",
                 "all-to-all", "collective-permute")
@@ -89,7 +89,7 @@ def _compile_variant(arch, shape_name, mesh, unroll):
         out_shardings=tree_shard(out_sp),
     )
     t0 = time.time()
-    with jax.set_mesh(mesh):      # lets model-internal sharding
+    with use_mesh(mesh):          # lets model-internal sharding
         lowered = jitted.lower(   # constraints (maybe_shard) resolve
             arch.state_specs(shape_name), arch.input_specs(shape_name))
         t1 = time.time()

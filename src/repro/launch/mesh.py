@@ -16,6 +16,17 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
+def use_mesh(mesh):
+    """Version-portable 'make this mesh active' context manager:
+    ``jax.set_mesh`` where it exists, the mesh's own thread-local
+    context manager (``with mesh:``) on older JAX — which is exactly
+    what ``models.common.active_abstract_mesh`` reads back."""
+    set_mesh = getattr(jax, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    return mesh
+
+
 def make_local_mesh():
     """Whatever devices exist locally (CPU tests: 1x1)."""
     n = len(jax.devices())

@@ -84,6 +84,26 @@ def cross_entropy_loss(logits: jax.Array, labels: jax.Array,
     return jnp.sum((lse - ll) * mask) / jnp.maximum(mask.sum(), 1.0)
 
 
+def active_abstract_mesh():
+    """Version-portable query for the active (abstract) mesh.
+
+    ``jax.sharding.get_abstract_mesh`` only exists in newer JAX; older
+    releases track the active mesh in the pxla thread-local set by
+    ``with mesh:``. Returns an object with ``axis_names``/``axis_sizes``
+    or None when no mesh is active (CPU smoke tests)."""
+    fn = getattr(jax.sharding, "get_abstract_mesh", None)
+    if fn is not None:
+        return fn()
+    try:
+        from jax.interpreters import pxla
+        phys = pxla.thread_resources.env.physical_mesh
+    except (ImportError, AttributeError):
+        return None
+    if phys is None or phys.empty:
+        return None
+    return getattr(phys, "abstract_mesh", phys)
+
+
 def maybe_shard(x, *entries):
     """with_sharding_constraint that degrades to a no-op when no mesh is
     active (CPU smoke tests) or when a dim isn't divisible by its axis.
@@ -91,7 +111,7 @@ def maybe_shard(x, *entries):
     Entries: None | axis name | "dp" (all non-'model' axes, i.e.
     pod+data) | "all" (every mesh axis — FSDP batch sharding).
     """
-    am = jax.sharding.get_abstract_mesh()
+    am = active_abstract_mesh()
     names = getattr(am, "axis_names", ())
     if not names:
         return x

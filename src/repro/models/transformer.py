@@ -21,8 +21,8 @@ import jax.numpy as jnp
 
 from repro.kernels import ops as kops
 from repro.models.common import (
-    act_fn, apply_rope, cross_entropy_loss, maybe_shard, normal_init,
-    rms_norm, rope_angles,
+    act_fn, active_abstract_mesh, apply_rope, cross_entropy_loss,
+    maybe_shard, normal_init, rms_norm, rope_angles,
 )
 from repro.models.moe import MoEConfig, init_moe, moe_ffn
 
@@ -226,7 +226,7 @@ def _fsdp_shard(x):
     """FSDP activation layout: batch over every mesh axis; when the
     batch doesn't divide (multi-pod, global_batch < devices) fall back
     to batch over (pod, data) x sequence over 'model' (DP x SP)."""
-    am = jax.sharding.get_abstract_mesh()
+    am = active_abstract_mesh()
     names = getattr(am, "axis_names", ())
     if not names:
         return x

@@ -10,6 +10,10 @@ import jax.numpy as jnp
 from repro.configs import ARCH_NAMES, get_arch
 from repro.training.optim import train_state_init
 
+# ~4 min of the suite's ~4.5 min lives here; `make test-fast` (and the
+# CI push tier) runs `-m "not slow"`, the full tier runs nightly.
+pytestmark = pytest.mark.slow
+
 LM_ARCHS = [a for a in ARCH_NAMES if get_arch(a).family == "lm"]
 GNN_ARCHS = [a for a in ARCH_NAMES if get_arch(a).family == "gnn"]
 REC_ARCHS = [a for a in ARCH_NAMES if get_arch(a).family == "recsys"]

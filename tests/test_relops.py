@@ -113,6 +113,27 @@ def test_reduce_groups_count_sum_min_max():
     assert rows == {(0, 2, 12, 5, 7), (1, 3, 15, 2, 9)}
 
 
+def test_scatter_compact_empty_keep():
+    """Regression: all-False keep must yield n == 0 and an all-PAD
+    buffer (the old first `n` assignment read pos[-1] == -1 here)."""
+    data = jnp.array([[1, 2], [3, 4], [5, 6]], jnp.int32)
+    keep = jnp.zeros((3,), bool)
+    d, v, n, ovf = R._scatter_compact(data, None, keep, 4, 0)
+    assert int(n) == 0
+    assert not bool(ovf)
+    assert bool((d == PAD).all())
+    assert v is None
+
+
+def test_scatter_compact_empty_keep_with_val():
+    data = jnp.array([[9]], jnp.int32)
+    val = jnp.array([7], jnp.int32)
+    d, v, n, _ = R._scatter_compact(data, val, jnp.zeros((1,), bool),
+                                    2, 0)
+    assert int(n) == 0
+    assert v.tolist() == [0, 0]
+
+
 def test_arrange_orders_by_key():
     r = rel_of([[0, 9], [1, 1], [2, 5]])
     a = R.arrange(r, (1,))
