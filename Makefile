@@ -1,10 +1,12 @@
 # Test tiers (see pytest.ini for the `slow` marker):
-#   test-fast — everything except the per-architecture smoke tests
-#               (~2-3 min; the CI push tier)
-#   test      — the full tier-1 command from ROADMAP.md (~4.5 min)
+#   test-fast    — everything except the per-architecture smoke tests
+#                  (~2-3 min; the CI push tier)
+#   test-sharded — the sharded-engine equivalence suite on 8 forced
+#                  host devices (part of the CI push tier)
+#   test         — the full tier-1 command from ROADMAP.md (~4.5 min)
 PYTEST = PYTHONPATH=src python -m pytest
 
-.PHONY: test test-fast bench-backends
+.PHONY: test test-fast test-sharded bench-backends bench-sharding
 
 test:
 	$(PYTEST) -x -q
@@ -12,5 +14,13 @@ test:
 test-fast:
 	$(PYTEST) -x -q -m "not slow"
 
+test-sharded:
+	XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+		$(PYTEST) -x -q tests/test_sharded.py
+
 bench-backends:
 	PYTHONPATH=src python -m benchmarks.run --only backends
+
+bench-sharding:
+	XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+		PYTHONPATH=src python -m benchmarks.run --only sharding

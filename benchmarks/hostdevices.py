@@ -1,0 +1,37 @@
+"""Force a CPU host-device count before jax initializes.
+
+Dev/test shim for the sharded fixpoint engine (engine/shard.py): CPU
+builds expose one device unless ``XLA_FLAGS`` requests more, and the
+flag is only read at XLA backend initialization. This module must stay
+importable without touching jax — ``repro/__init__`` imports jax, so
+the helper cannot live under ``src/repro`` — letting entry points
+(tests/test_sharded.py, benchmarks/sharding.py) call it at import
+time, ahead of any jax import. See ``launch.mesh.make_shard_mesh``.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+DEFAULT_HOST_DEVICES = 8
+
+
+def force_host_device_count(n: int = DEFAULT_HOST_DEVICES) -> bool:
+    """Append ``--xla_force_host_platform_device_count=n`` to XLA_FLAGS
+    if jax has not been imported yet and the flag is not already set
+    (an explicit operator choice always wins — XLA takes the last
+    occurrence, so appending would silently override it).
+
+    "jax not yet imported" is a conservative proxy for "the XLA backend
+    has not initialized": it keeps this a no-op inside the full pytest
+    suite (earlier-collected modules import jax first), so the forced
+    device count never leaks into single-device tests — standalone runs
+    of the sharded suite/benchmark hit the flag before anything imports
+    jax and get the full mesh. Returns True if the flag was applied."""
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "jax" in sys.modules or (
+            "--xla_force_host_platform_device_count" in flags):
+        return False
+    os.environ["XLA_FLAGS"] = (
+        flags + f" --xla_force_host_platform_device_count={n}")
+    return True

@@ -98,6 +98,44 @@ DEGREE = """
 deg(x, COUNT(y)) :- edge(x, y).
 """
 
+# nonrecursive SUM aggregation (equivalence corpora)
+SUM_AGG = """
+.input edge
+.output tot
+tot(x, SUM(y)) :- edge(x, y).
+"""
+
+# stratified negation + recursion: drives antijoin -> membership
+# through whatever execution path is under test
+UNREACH = """
+.input edge
+.input source
+.output unreach
+reach(x) :- source(x).
+reach(y) :- reach(x), edge(x, y).
+node(x) :- edge(x, _).
+node(y) :- edge(_, y).
+unreach(x) :- node(x), !reach(x).
+"""
+
+
+def equivalence_datasets(seed: int = 0) -> dict:
+    """The shared program/EDB corpus pinned by the kernel-backend and
+    sharded-engine equivalence suites (tests/test_backend_equivalence.py,
+    tests/test_sharded.py): name -> (source, edbs). One definition so
+    the two suites cannot silently diverge."""
+    rng = np.random.default_rng(seed)
+    return {
+        "TC": (TC, {"edge": rng.integers(0, 16, size=(40, 2))}),
+        "SG": (SG, {"par": rng.integers(0, 12, size=(30, 2))}),
+        "Reach": (REACH, {"edge": rng.integers(0, 40, size=(60, 2)),
+                          "source": np.array([[0]])}),
+        "Count": (DEGREE, {"edge": rng.integers(0, 16, size=(40, 2))}),
+        "Sum": (SUM_AGG, {"edge": rng.integers(0, 16, size=(40, 2))}),
+        "Negation": (UNREACH, {"edge": rng.integers(0, 40, size=(60, 2)),
+                               "source": np.array([[0]])}),
+    }
+
 
 def make_datasets(scale: float = 1.0, seed: int = 0) -> dict:
     """Synthetic datasets per program; `scale` grows sizes."""

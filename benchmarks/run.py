@@ -12,7 +12,8 @@ import json
 from pathlib import Path
 
 ALL_TABLES = ("table1", "seminaive", "robustness", "specialization",
-              "incremental", "kernels", "backends", "roofline")
+              "incremental", "kernels", "backends", "sharding",
+              "roofline")
 
 
 def collect(only=None) -> list[dict]:
@@ -40,6 +41,9 @@ def collect(only=None) -> list[dict]:
     if "backends" in only:
         from benchmarks.kernels_bench import bench_fixpoint_backends
         rows += bench_fixpoint_backends()
+    if "sharding" in only:
+        from benchmarks.sharding import bench as bench_sharding
+        rows += bench_sharding()
     if "roofline" in only:
         from benchmarks.roofline import rows as roof_rows
         try:
@@ -63,7 +67,8 @@ def main() -> None:
         name = "/".join(str(r.get(k)) for k in
                         ("table", "program", "arch", "name", "rule",
                          "shape", "setting", "order", "update_size",
-                         "kind", "backend") if r.get(k) is not None)
+                         "kind", "backend", "shards")
+                        if r.get(k) is not None)
         us = r.get("us_per_call")
         if us is None:
             for k in ("flowlog_s", "incremental_s", "presence_s",
@@ -75,8 +80,19 @@ def main() -> None:
         print(f"{name},{us},{json.dumps(derived)}")
     out = Path(args.out)
     out.parent.mkdir(parents=True, exist_ok=True)
-    out.write_text(json.dumps(rows, indent=1))
-    print(f"\n# wrote {len(rows)} rows to {out}")
+    # merge-update: a partial run (--only X) replaces only its own
+    # tables' rows, preserving everything previously recorded
+    kept = []
+    if out.exists():
+        ran = {r.get("table") for r in rows}
+        try:
+            kept = [r for r in json.loads(out.read_text())
+                    if r.get("table") not in ran]
+        except (ValueError, AttributeError):
+            kept = []
+    out.write_text(json.dumps(kept + rows, indent=1))
+    print(f"\n# wrote {len(rows)} rows to {out} "
+          f"({len(kept)} rows of other tables kept)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,83 @@
+"""Shard-count scaling curve for the sharded fixpoint engine.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m benchmarks.run --only sharding
+
+Times the same fixpoint end-to-end under ``Engine`` (the shards=1
+baseline row) and ``ShardedEngine`` at 2/4/8 shards. On CPU the
+"devices" are host threads and each iteration pays the all-to-all
+repartitions in emulation, so this is a *correctness-at-scale curve*
+(identical fact counts and iteration counts per row), not a CPU
+speedup claim — absolute scaling must be measured on a real multi-chip
+mesh, like the PR 1 kernel benchmarks.
+
+If jax is not yet initialized, importing this module forces 8 host
+devices so the full curve runs; otherwise shard counts beyond the
+visible device count are skipped (and noted in the emitted rows).
+"""
+from __future__ import annotations
+
+import statistics
+import time
+
+from benchmarks.hostdevices import force_host_device_count
+
+force_host_device_count()  # must precede the first jax device init
+
+import numpy as np
+
+SHARD_COUNTS = (1, 2, 4, 8)
+REPEATS = 3
+
+
+def _programs():
+    from benchmarks.programs import REACH, TC
+    rng = np.random.default_rng(0)
+    return {
+        "TC": (TC, {"edge": rng.integers(0, 24, size=(120, 2))}, "tc"),
+        "Reach": (REACH, {"edge": rng.integers(0, 200, size=(500, 2)),
+                          "source": np.array([[0]])}, "reach"),
+    }
+
+
+def bench() -> list[dict]:
+    import jax
+
+    from repro.core.optimizer import compile_program
+    from repro.engine import Engine, EngineConfig
+    from repro.engine.shard import ShardedEngine
+
+    n_dev = len(jax.devices())
+    rows: list[dict] = []
+    for name, (src, edbs, out_rel) in _programs().items():
+        base_result = base_time = None
+        for shards in SHARD_COUNTS:
+            if shards > n_dev:
+                rows.append({"table": "sharding", "program": name,
+                             "shards": shards,
+                             "skipped": f"only {n_dev} devices"})
+                continue
+            cfg = EngineConfig(idb_cap=1 << 12, intermediate_cap=1 << 14,
+                               kernel_backend="jnp", shards=shards)
+            cls = Engine if shards == 1 else ShardedEngine
+            times = []
+            facts = iters = None
+            for _ in range(REPEATS):
+                eng = cls(compile_program(src), cfg)
+                t0 = time.perf_counter()
+                out, stats = eng.run(dict(edbs))
+                times.append(time.perf_counter() - t0)
+                facts = int(out[out_rel].shape[0])
+                iters = stats.total_iterations
+            med = statistics.median(times)
+            row = {"table": "sharding", "program": name, "shards": shards,
+                   "median_s": round(med, 4), "facts": facts,
+                   "iterations": iters}
+            if shards == 1:
+                base_result, base_time = (facts, iters), med
+            else:
+                row["speedup_vs_1"] = round(base_time / med, 3)
+                row["matches_single_device"] = (
+                    (facts, iters) == base_result)
+            rows.append(row)
+    return rows

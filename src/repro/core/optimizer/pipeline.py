@@ -383,6 +383,23 @@ def compile_program(
                 plans_all.append(plan)
         stratum_plans.append(sp)
 
+    # Wide heads are unsupported by the engine's packed row keys:
+    # relation.pack_columns packs at most 3 columns, and the semi-naive
+    # merge (merge_with_delta / difference) packs ALL stored head
+    # columns — so an IDB storing >= 4 data columns would fail deep in
+    # the first fixpoint iteration. Reject at compile time instead,
+    # naming an offending rule. (Monoid IDBs store the lattice value
+    # out-of-row, hence the stored arity is head arity - 1.)
+    for st in strata:
+        for rule in st.rules:
+            name = rule.head_name
+            stored = arities[name] - (1 if name in monoid_idbs else 0)
+            if stored > 3:
+                raise LoweringError(
+                    f"IDB {name!r} stores {stored} head columns, but the "
+                    f"engine's packed row key supports at most 3 (see "
+                    f"ROADMAP 'Wide heads'); offending rule: {rule}")
+
     # monoid consistency: every rule deriving a monoid IDB must emit the
     # value column; non-aggregate rules for a monoid IDB are treated as
     # emitting their last column as the value (e.g. facts).

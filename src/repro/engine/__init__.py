@@ -7,10 +7,22 @@ from repro.engine.backend import (
 )
 from repro.engine.engine import Engine, EngineConfig, EngineStats
 
+
+def make_engine(compiled, config: EngineConfig | None = None) -> Engine:
+    """Engine factory: ``config.shards >= 2`` selects the sharded
+    multi-device driver (engine/shard.py), else the single-device
+    Engine. The two are byte-identical in results and iteration counts
+    (tests/test_sharded.py)."""
+    if config is not None and int(config.shards or 0) >= 2:
+        from repro.engine.shard import ShardedEngine
+        return ShardedEngine(compiled, config)
+    return Engine(compiled, config)
+
+
 __all__ = [
     "PRESENCE", "COUNTING", "MIN_MONOID", "MAX_MONOID", "Semiring",
     "Relation", "from_numpy", "to_numpy",
     "JNP", "JnpDispatch", "KernelDispatch", "PallasDispatch",
     "resolve_backend",
-    "Engine", "EngineConfig", "EngineStats",
+    "Engine", "EngineConfig", "EngineStats", "make_engine",
 ]

@@ -9,8 +9,14 @@ optimizer. Concretely, two primitives dominate the fixpoint hot path:
       The count/locate phase of the sort-merge join: for every probe key
       (packed row key — up to 63 bits — int64, sorted ascending, dead
       rows = KEY_PAD) its lower/upper rank in the sorted build keys.
-      Serves ``relops.join`` and the lattice lookup of
-      ``relops.merge_with_delta``.
+      Serves ``relops.join``, the lattice lookup of
+      ``relops.merge_with_delta``, and (via the sort-and-scatter wrapper
+      in ``relops.membership``) semijoin/antijoin/difference.
+      ``needs_sorted_probe`` declares whether the implementation
+      requires sorted probe keys: the Pallas merge-path kernel does
+      (its block min/max skip logic assumes both sides ascend), plain
+      ``searchsorted`` does not — membership only pays the probe-side
+      sort where the kernel needs it.
 
   segment_reduce(values, seg_ids, num_segments, op) -> [num_segments]
       Sorted-segment aggregation (op in sum/min/max) behind
@@ -52,9 +58,8 @@ in tests/test_backend_equivalence.py pin down):
     byte-identical relations.
 
 Ops NOT yet dispatched (still pure jnp, candidates for future kernels):
-``membership`` (semijoin/antijoin/difference — probe side is unsorted
-there), ``dedupe``'s duplicate-combine, and the bounded expand of
-``join``. See ROADMAP "Open items".
+``dedupe``'s duplicate-combine and the bounded expand of ``join``.
+See ROADMAP "Open items".
 """
 from __future__ import annotations
 
@@ -72,6 +77,10 @@ class KernelDispatch:
     """
 
     name = "abstract"
+    # True if ``probe`` requires ascending probe keys (the Pallas
+    # merge-path kernel does); relops.membership then sorts-and-scatters
+    # its unsorted probe side instead of calling probe directly.
+    needs_sorted_probe = False
 
     def probe(self, build_keys: jax.Array, probe_keys: jax.Array):
         """(lo, hi) int32 ranks of sorted int64 probe keys in sorted
@@ -118,6 +127,8 @@ class JnpDispatch(KernelDispatch):
 class PallasDispatch(KernelDispatch):
     """Routes to the Pallas kernels (compiled on TPU, interpret mode on
     CPU so tests exercise the deployed kernel bodies)."""
+
+    needs_sorted_probe = True
 
     def __init__(self, interpret: bool):
         self.interpret = interpret

@@ -56,6 +56,13 @@ class EngineConfig:
     # a KernelDispatch instance is also accepted. Resolved once at
     # engine construction.
     kernel_backend: str = "auto"
+    # sharded execution (engine/shard.py): number of hash partitions /
+    # devices on the 1-D fixpoint mesh. 0 or 1 = single-device Engine;
+    # >= 2 selects ShardedEngine via ``repro.engine.make_engine``.
+    # ``shard_mesh`` optionally supplies a prebuilt 1-D Mesh whose sole
+    # axis is named "shards" (defaults to launch.mesh.make_shard_mesh).
+    shards: int = 0
+    shard_mesh: object = None
 
 
 @dataclass
@@ -120,6 +127,15 @@ class Engine:
         return Relation(data, val.astype(jnp.int32), rel.n)
 
     # -- plan evaluation ------------------------------------------------------
+    def _merge_head(self, rels: list, sr: Semiring, cap: int):
+        """Combine all derived relations for one head IDB into a single
+        sorted distinct relation. Overridden by ShardedEngine to first
+        repartition rows to the head's home shard (equal rows must
+        co-locate before the duplicate-combine)."""
+        if len(rels) == 1:
+            return R.dedupe(rels[0].data, rels[0].val, sr, cap)
+        return R.concat_all(rels, sr, cap)
+
     def _eval_plans(self, plans, env: Env, ev: Evaluator):
         """Evaluate plans, concat per head IDB -> derived relations."""
         by_head: dict[str, list[Relation]] = {}
@@ -129,13 +145,8 @@ class Engine:
             by_head.setdefault(p.head, []).append(rel)
         out: dict[str, Relation] = {}
         for head, rels in by_head.items():
-            sr = self._sr_of(head)
-            cap = self._idb_cap(head)
-            if len(rels) == 1:
-                merged, ov = R.dedupe(
-                    rels[0].data, rels[0].val, sr, cap)
-            else:
-                merged, ov = R.concat_all(rels, sr, cap)
+            merged, ov = self._merge_head(
+                rels, self._sr_of(head), self._idb_cap(head))
             env.overflow = env.overflow | ov
             out[head] = merged
         return out
@@ -154,6 +165,76 @@ class Engine:
                 di += 1
         return np.stack(cols, axis=1) if cols else data
 
+    # -- shared stratum bodies (also run inside shard_map by ShardedEngine) ---
+    def _ground_relation(self, sp: I.StratumPlan, name: str) -> Relation:
+        """Ground facts for one IDB as a host-built Relation."""
+        facts = sp.facts.get(name, [])
+        sr = self._sr_of(name)
+        if not facts:
+            return self._empty_idb(name)
+        arr = np.array(facts, dtype=np.int64)
+        if name in self.monoid:
+            _, vpos = self.monoid[name]
+            vals = arr[:, vpos]
+            dcols = [c for c in range(arr.shape[1]) if c != vpos]
+            arr = arr[:, dcols] if dcols else np.zeros(
+                (len(vals), 1), np.int64)
+            return from_numpy(
+                arr, self._idb_cap(name), val=vals,
+                val_identity=sr.identity, dedupe=False)
+        if arr.shape[1] == 0:
+            arr = np.zeros((arr.shape[0], 1), np.int64)
+        return from_numpy(arr, self._idb_cap(name))
+
+    def _stratum_init(self, rels, init_rels, nonrec, idbs, ev,
+                      monoid_names):
+        """Facts + nonrecursive rules once -> initial (full, delta)."""
+        env = Env(dict(rels), self.compiled.shared, monoid_names)
+        derived = self._eval_plans(nonrec, env, ev)
+        state = {}
+        for name in idbs:
+            full0 = init_rels[name]
+            if name in derived:
+                sr = self._sr_of(name)
+                full0, delta0, ov = R.merge_with_delta(
+                    full0, derived[name], sr, self._idb_cap(name),
+                    backend=self.backend)
+                env.overflow = env.overflow | ov
+            else:
+                delta0 = full0
+            state[name] = (full0, delta0)
+        return state, env.overflow
+
+    def _stratum_iter(self, state, base, rec, idbs, ev, monoid_names):
+        """One semi-naive iteration -> (new_state, overflow)."""
+        env_rels = dict(base)
+        ovf = jnp.zeros((), bool)
+        for name in idbs:
+            full, delta = state[name]
+            sr = self._sr_of(name)
+            full_new, ov = R.merge(full, delta, sr, self._idb_cap(name))
+            ovf |= ov
+            env_rels[(name, I.FULL)] = full
+            env_rels[(name, I.FULL_OLD)] = full
+            env_rels[(name, I.DELTA)] = delta
+            env_rels[(name, I.FULL_NEW)] = full_new
+        env = Env(env_rels, self.compiled.shared, monoid_names)
+        derived = self._eval_plans(rec, env, ev)
+        new_state = {}
+        for name in idbs:
+            sr = self._sr_of(name)
+            full_new = env_rels[(name, I.FULL_NEW)]
+            if name in derived:
+                nf, nd, ov = R.merge_with_delta(
+                    full_new, derived[name], sr, self._idb_cap(name),
+                    backend=self.backend)
+                ovf |= ov
+            else:
+                nf = full_new
+                nd = self._empty_idb(name)
+            new_state[name] = (nf, nd)
+        return new_state, ovf | env.overflow
+
     # -- stratum execution ----------------------------------------------------
     def _run_stratum(self, sp: I.StratumPlan, env_rels, stats,
                      stratum_key, init_state=None):
@@ -166,48 +247,16 @@ class Engine:
 
         idbs = sorted(sp.idbs)
         # ground facts
-        init_rels: dict[str, Relation] = {}
-        for name in idbs:
-            facts = sp.facts.get(name, [])
-            sr = self._sr_of(name)
-            if facts:
-                arr = np.array(facts, dtype=np.int64)
-                if name in self.monoid:
-                    _, vpos = self.monoid[name]
-                    vals = arr[:, vpos]
-                    dcols = [c for c in range(arr.shape[1]) if c != vpos]
-                    arr = arr[:, dcols] if dcols else np.zeros(
-                        (len(vals), 1), np.int64)
-                    init_rels[name] = from_numpy(
-                        arr, self._idb_cap(name), val=vals,
-                        val_identity=sr.identity, dedupe=False)
-                else:
-                    if arr.shape[1] == 0:
-                        arr = np.zeros((arr.shape[0], 1), np.int64)
-                    init_rels[name] = from_numpy(arr, self._idb_cap(name))
-            else:
-                init_rels[name] = self._empty_idb(name)
+        init_rels = {name: self._ground_relation(sp, name)
+                     for name in idbs}
 
         nonrec = [p for p in sp.plans if p.variant == -1]
         rec = [p for p in sp.plans if p.variant >= 0]
 
         # -- init: facts + nonrecursive rules once
         def init_fn(rels):
-            env = Env(dict(rels), self.compiled.shared, monoid_names)
-            derived = self._eval_plans(nonrec, env, ev)
-            state = {}
-            for name in idbs:
-                full0 = init_rels[name]
-                if name in derived:
-                    sr = self._sr_of(name)
-                    full0, delta0, ov = R.merge_with_delta(
-                        full0, derived[name], sr, self._idb_cap(name),
-                        backend=self.backend)
-                    env.overflow = env.overflow | ov
-                else:
-                    delta0 = full0
-                state[name] = (full0, delta0)
-            return state, env.overflow
+            return self._stratum_init(
+                rels, init_rels, nonrec, idbs, ev, monoid_names)
 
         if init_state is not None:
             # incremental continuation: merge seed deltas into given fulls
@@ -242,35 +291,11 @@ class Engine:
 
         # -- one semi-naive iteration
         def iter_fn(state, base):
-            env_rels = dict(base)
-            ovf = jnp.zeros((), bool)
-            for name in idbs:
-                full, delta = state[name]
-                sr = self._sr_of(name)
-                full_new, ov = R.merge(full, delta, sr, self._idb_cap(name))
-                ovf |= ov
-                env_rels[(name, I.FULL)] = full
-                env_rels[(name, I.FULL_OLD)] = full
-                env_rels[(name, I.DELTA)] = delta
-                env_rels[(name, I.FULL_NEW)] = full_new
-            env = Env(env_rels, self.compiled.shared, monoid_names)
-            derived = self._eval_plans(rec, env, ev)
-            new_state = {}
-            for name in idbs:
-                sr = self._sr_of(name)
-                full_new = env_rels[(name, I.FULL_NEW)]
-                if name in derived:
-                    nf, nd, ov = R.merge_with_delta(
-                        full_new, derived[name], sr, self._idb_cap(name),
-                        backend=self.backend)
-                    ovf |= ov
-                else:
-                    nf = full_new
-                    nd = self._empty_idb(name)
-                new_state[name] = (nf, nd)
+            new_state, ovf = self._stratum_iter(
+                state, base, rec, idbs, ev, monoid_names)
             any_delta = jnp.stack(
                 [new_state[n][1].n > 0 for n in idbs]).any()
-            return new_state, any_delta, ovf | env.overflow
+            return new_state, any_delta, ovf
 
         stratum_iters = 0
         delta_log = []
@@ -343,9 +368,8 @@ class Engine:
                 self.cfg.idb_caps = {
                     k: v * 2 for k, v in self.cfg.idb_caps.items()}
 
-    def _run_once(self, edbs, edb_caps):
-        t0 = time.perf_counter()
-        stats = EngineStats()
+    def _edb_env(self, edbs, edb_caps) -> dict:
+        """Host EDB arrays -> (name, FULL) Relation environment."""
         env_rels: dict[tuple[str, str], Relation] = {}
         for name in self.compiled.edbs:
             arity = max(self.compiled.arities.get(name, 1), 1)
@@ -362,22 +386,37 @@ class Engine:
                 name, max(16, int(2 ** np.ceil(np.log2(max(
                     data.shape[0], 1) + 1)))))
             env_rels[(name, I.FULL)] = from_numpy(data, cap)
+        return env_rels
 
-        for sp in self.compiled.strata:
-            env_rels = self._run_stratum(
-                sp, env_rels, stats, f"s{sp.index}")
+    def _host_relation(self, rel) -> Relation:
+        """Bring an environment relation back to a single host-side
+        Relation (identity here; ShardedEngine gathers)."""
+        return rel
 
+    def _export(self, env_rels, stats) -> dict:
         out: dict[str, np.ndarray] = {}
         for name in self.compiled.arities:
             key = (name, I.FULL)
             if key not in env_rels:
                 continue
-            rel = env_rels[key]
+            rel = self._host_relation(env_rels[key])
             if name in self.monoid:
                 out[name] = self.export_monoid(name, rel)
             else:
                 out[name] = to_numpy(rel)
             stats.total_facts[name] = out[name].shape[0]
+        return out
+
+    def _run_once(self, edbs, edb_caps):
+        t0 = time.perf_counter()
+        stats = EngineStats()
+        env_rels = self._edb_env(edbs, edb_caps)
+
+        for sp in self.compiled.strata:
+            env_rels = self._run_stratum(
+                sp, env_rels, stats, f"s{sp.index}")
+
+        out = self._export(env_rels, stats)
         stats.wall_s = time.perf_counter() - t0
         self.last_env = env_rels
         return out, stats

@@ -107,8 +107,40 @@ def _project(schema, data, cols):
 
 
 class Evaluator:
+    """Renders IR to physical relops.
+
+    Every call into a physical operator goes through an overridable
+    ``_*_op`` hook so alternate execution strategies can wrap the ops
+    without re-implementing the IR walk — ``shard.ShardedEvaluator``
+    overrides them to repartition operands across a device mesh before
+    running the same shard-local op bodies."""
+
     def __init__(self, cfg: LowerConfig):
         self.cfg = cfg
+
+    # -- physical-op hooks ---------------------------------------------------
+    def _dedupe_op(self, data, val, out_cap):
+        return R.dedupe(data, val, self.cfg.semiring, out_cap)
+
+    def _join_op(self, left, right, l_keys, r_keys, l_out, r_out, out_cap):
+        return R.join(left, right, l_keys, r_keys, l_out, r_out,
+                      self.cfg.semiring, out_cap,
+                      backend=self.cfg.backend)
+
+    def _semijoin_op(self, left, right, l_keys, r_keys):
+        return R.semijoin(left, right, l_keys, r_keys, left.capacity,
+                          self.cfg.semiring, backend=self.cfg.backend)
+
+    def _antijoin_op(self, left, right, l_keys, r_keys):
+        return R.antijoin(left, right, l_keys, r_keys, left.capacity,
+                          self.cfg.semiring, backend=self.cfg.backend)
+
+    def _concat_op(self, rels, out_cap):
+        return R.concat_all(rels, self.cfg.semiring, out_cap)
+
+    def _reduce_op(self, child, group_cols, agg_specs, out_cap):
+        return R.reduce_groups(child, group_cols, agg_specs, out_cap,
+                               backend=self.cfg.backend)
 
     # -- public -------------------------------------------------------------
     def eval(self, node: I.IR, env: Env) -> Relation:
@@ -153,19 +185,18 @@ class Evaluator:
         mask = _comp_mask(comparisons, child.data, cols) & live_mask(child)
         data = _project(schema, child.data, cols)
         data = jnp.where(mask[:, None], data, PAD)
-        out, ov2 = R.dedupe(data, child.val, self.cfg.semiring,
-                            child.capacity)
+        out, ov2 = self._dedupe_op(data, child.val, child.capacity)
         return out, ovf | ov2
 
     def _eval_join(self, node: I.Join, env: Env):
         data, val, valid, ovf = self._loose_join(node, env, node.schema, ())
-        out, ov2 = R.dedupe(data, val, self.cfg.semiring, self._join_cap())
+        out, ov2 = self._dedupe_op(data, val, self._join_cap())
         return out, ovf | ov2
 
     def _eval_joinflatmap(self, node: I.JoinFlatMap, env: Env):
         data, val, valid, ovf = self._loose_join(
             node, env, node.schema, node.comparisons)
-        out, ov2 = R.dedupe(data, val, self.cfg.semiring, self._join_cap())
+        out, ov2 = self._dedupe_op(data, val, self._join_cap())
         return out, ovf | ov2
 
     def _join_cap(self) -> int:
@@ -181,10 +212,8 @@ class Evaluator:
         l_out = tuple(range(left.arity))
         r_out = tuple(i for i in range(right.arity)
                       if i not in set(r_keys))
-        data, val, valid, total, ovj = R.join(
-            left, right, l_keys, r_keys, l_out, r_out,
-            self.cfg.semiring, self._join_cap(),
-            backend=self.cfg.backend)
+        data, val, valid, total, ovj = self._join_op(
+            left, right, l_keys, r_keys, l_out, r_out, self._join_cap())
         # joined loose schema: left schema ++ right schema minus key dups
         joined_names: dict[str, int] = {}
         w = 0
@@ -217,8 +246,7 @@ class Evaluator:
         rcols = _schema_cols(node.right.schema)
         l_keys = tuple(lcols[k] for k in node.keys)
         r_keys = tuple(rcols[k] for k in node.keys)
-        out, ov = R.semijoin(left, right, l_keys, r_keys,
-                             left.capacity, self.cfg.semiring)
+        out, ov = self._semijoin_op(left, right, l_keys, r_keys)
         return out, ovl | ovr | ov
 
     def _eval_antijoin(self, node: I.Antijoin, env: Env):
@@ -228,8 +256,7 @@ class Evaluator:
         rcols = _schema_cols(node.right.schema)
         l_keys = tuple(lcols[k] for k in node.keys)
         r_keys = tuple(rcols[k] for k in node.keys)
-        out, ov = R.antijoin(left, right, l_keys, r_keys,
-                             left.capacity, self.cfg.semiring)
+        out, ov = self._antijoin_op(left, right, l_keys, r_keys)
         return out, ovl | ovr | ov
 
     def _eval_concat(self, node: I.Concat, env: Env):
@@ -246,13 +273,12 @@ class Evaluator:
             rels.append(r)
             ovf |= o
         cap = max(r.capacity for r in rels)
-        out, ov = R.concat_all(rels, self.cfg.semiring, cap)
+        out, ov = self._concat_op(rels, cap)
         return out, ovf | ov
 
     def _eval_distinct(self, node: I.Distinct, env: Env):
         child, ovf = self._eval(node.child, env)
-        out, ov = R.dedupe(child.data, child.val, self.cfg.semiring,
-                           child.capacity)
+        out, ov = self._dedupe_op(child.data, child.val, child.capacity)
         return out, ovf | ov
 
     def _eval_reduce(self, node: I.Reduce, env: Env):
@@ -260,9 +286,8 @@ class Evaluator:
         cols = _schema_cols(node.child.schema)
         group_cols = tuple(cols[g] for g in node.group)
         agg_specs = tuple((f, cols[c]) for f, c in node.aggs)
-        reduced, ov = R.reduce_groups(
-            child, group_cols, agg_specs, child.capacity,
-            backend=self.cfg.backend)
+        reduced, ov = self._reduce_op(
+            child, group_cols, agg_specs, child.capacity)
         # reduce_groups emits [group..., aggs...]; permute to node.schema
         perm = []
         gi, ai = 0, 0

@@ -7,7 +7,8 @@ shape-static, so the whole iteration body fuses under jit, and the same
 code lowers under pjit/shard_map for scale-out (DESIGN.md §7).
 
 Hot physical primitives (the join's count/locate probe, the
-merge_with_delta lattice lookup, and grouped segment aggregation) are
+merge_with_delta lattice lookup, the membership probe behind
+semijoin/antijoin/difference, and grouped segment aggregation) are
 not hard-coded: ops take an injected ``KernelDispatch``
 (engine/backend.py) that routes them to the Pallas TPU kernels or the
 pure-jnp fallback. ``backend=None`` means jnp.
@@ -171,25 +172,46 @@ def join(left: Relation, right: Relation,
 
 def membership(left: Relation, right: Relation,
                l_keys: tuple[int, ...], r_keys: tuple[int, ...],
-               right_arranged: bool = False) -> jax.Array:
+               right_arranged: bool = False,
+               backend: Optional[KernelDispatch] = None) -> jax.Array:
     """Boolean mask over left rows: does the key appear in right?
-    (The lift operator of Sec. 8 materializes this 0/1.)"""
+    (The lift operator of Sec. 8 materializes this 0/1.)
+
+    The rank probe goes through the injected ``backend``. The Pallas
+    merge-path kernel requires *sorted* probe keys (it skips blocks by
+    min/max bounds), but left here is arranged by its own row order, not
+    by ``l_keys`` — so for backends with ``needs_sorted_probe`` we sort
+    the probe keys, probe, and scatter the verdicts back through the
+    argsort permutation (the "sort-and-scatter variant" named by the
+    ROADMAP). KEY_PAD probes sort last and may overcount their hi rank
+    in-kernel; the trailing live-mask AND discards them."""
+    bk = backend or JNP
     if not right_arranged:
         right = arrange(right, r_keys)
     if len(l_keys) == 0:
-        # ground guard: right non-empty?
-        return jnp.broadcast_to(right.n > 0, (left.capacity,))
+        # ground guard: right non-empty? (dead left rows stay dead —
+        # without the mask a zero-key semijoin would resurrect the PAD
+        # tail as live rows and the fixpoint would never drain)
+        return jnp.broadcast_to(right.n > 0, (left.capacity,)) & (
+            live_mask(left))
     lk = pack_columns(left.data, l_keys, live_mask(left))
     rk = pack_columns(right.data, r_keys, live_mask(right))
-    lo, hi = _searchsorted(rk, lk)
-    return (hi > lo) & live_mask(left)
+    if bk.needs_sorted_probe:
+        order = jnp.argsort(lk)
+        lo, hi = bk.probe(rk, lk[order])
+        found = jnp.zeros((left.capacity,), bool).at[order].set(hi > lo)
+    else:
+        lo, hi = bk.probe(rk, lk)
+        found = hi > lo
+    return found & live_mask(left)
 
 
 def semijoin(left: Relation, right: Relation,
              l_keys: tuple[int, ...], r_keys: tuple[int, ...],
-             out_cap: Optional[int] = None, sr: Semiring = PRESENCE):
+             out_cap: Optional[int] = None, sr: Semiring = PRESENCE,
+             backend: Optional[KernelDispatch] = None):
     out_cap = out_cap or left.capacity
-    keep = membership(left, right, l_keys, r_keys)
+    keep = membership(left, right, l_keys, r_keys, backend=backend)
     d, v, n, ov = _scatter_compact(
         left.data, left.val, keep, out_cap,
         sr.identity if sr.has_value else 0)
@@ -198,19 +220,23 @@ def semijoin(left: Relation, right: Relation,
 
 def antijoin(left: Relation, right: Relation,
              l_keys: tuple[int, ...], r_keys: tuple[int, ...],
-             out_cap: Optional[int] = None, sr: Semiring = PRESENCE):
+             out_cap: Optional[int] = None, sr: Semiring = PRESENCE,
+             backend: Optional[KernelDispatch] = None):
     out_cap = out_cap or left.capacity
-    keep = (~membership(left, right, l_keys, r_keys)) & live_mask(left)
+    keep = (~membership(left, right, l_keys, r_keys, backend=backend)) & (
+        live_mask(left))
     d, v, n, ov = _scatter_compact(
         left.data, left.val, keep, out_cap,
         sr.identity if sr.has_value else 0)
     return Relation(d, v if left.val is not None else None, n), ov
 
 
-def difference(a: Relation, b: Relation) -> tuple[Relation, jax.Array]:
+def difference(a: Relation, b: Relation,
+               backend: Optional[KernelDispatch] = None,
+               ) -> tuple[Relation, jax.Array]:
     """Rows of a (all columns as key) not present in b."""
     cols = tuple(range(a.arity))
-    return antijoin(a, b, cols, cols)
+    return antijoin(a, b, cols, cols, backend=backend)
 
 
 def concat_all(rels: Sequence[Relation], sr: Semiring, out_cap: int):
@@ -241,7 +267,7 @@ def merge_with_delta(full: Relation, derived: Relation, sr: Semiring,
     """
     new_full, ov1 = merge(full, derived, sr, out_cap)
     if not sr.has_value:
-        delta, ov2 = difference(derived, full)
+        delta, ov2 = difference(derived, full, backend=backend)
         return new_full, delta, ov1 | ov2
     # lattice: look up each new_full row's key in old full, compare
     # values. Both arrays are sorted arrangements, so the lookup is a

@@ -30,9 +30,11 @@ physical execution backend on TPU rather than standalone demos:
 
   merge_probe_counts — the count/locate phase of ``relops.join``
                        (both sides are arrangements, so build and probe
-                       key arrays arrive sorted with KEY_PAD tails) and
+                       key arrays arrive sorted with KEY_PAD tails),
                        the lattice lookup of ``relops.merge_with_delta``
-                       (lo rank only). Packed row keys (up to 63 bits;
+                       (lo rank only), and — via the sort-and-scatter
+                       wrapper in ``relops.membership`` — semijoin/
+                       antijoin/difference. Packed row keys (up to 63 bits;
                        3-column packs reach bit 62) split into an
                        order-isomorphic int32 pair in-kernel; KEY_PAD
                        maps to the max pair, so dead rows sort last on
@@ -47,8 +49,7 @@ physical execution backend on TPU rather than standalone demos:
                        relations (tests/test_backend_equivalence.py).
 
 Still jnp-only (future kernels plug into the same dispatch seam):
-``membership`` (semijoin/antijoin/difference — unsorted probe side),
-``dedupe``'s duplicate-combine, and the bounded expand inside ``join``.
+``dedupe``'s duplicate-combine and the bounded expand inside ``join``.
 """
 from repro.kernels.ops import (
     segment_reduce, merge_probe_counts, fm_interaction, flash_attention,

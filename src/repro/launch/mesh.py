@@ -33,6 +33,29 @@ def make_local_mesh():
     return jax.make_mesh((1, n), ("data", "model"))
 
 
+SHARD_AXIS = "shards"
+
+
+def make_shard_mesh(num_shards: int):
+    """1-D mesh for the sharded fixpoint engine (engine/shard.py): the
+    first ``num_shards`` local devices on a single axis named "shards".
+    On CPU, override the device count with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (set before
+    the first jax initialization)."""
+    import numpy as np
+    from jax.sharding import Mesh
+
+    devices = jax.devices()
+    if num_shards < 1:
+        raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+    if num_shards > len(devices):
+        raise ValueError(
+            f"num_shards={num_shards} exceeds the {len(devices)} visible "
+            f"devices; on CPU set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={num_shards}")
+    return Mesh(np.array(devices[:num_shards]), (SHARD_AXIS,))
+
+
 HARDWARE = {
     # TPU v5e per-chip targets (roofline constants; EXPERIMENTS.md)
     "peak_flops_bf16": 197e12,

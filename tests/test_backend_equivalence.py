@@ -7,7 +7,7 @@ import pytest
 
 import jax.numpy as jnp
 
-from benchmarks.programs import DEGREE, REACH, SG, TC
+from benchmarks.programs import equivalence_datasets
 from repro.core.optimizer import compile_program
 from repro.engine import Engine, EngineConfig
 from repro.engine.backend import (
@@ -16,13 +16,6 @@ from repro.engine.backend import (
 from repro.engine.relation import KEY_PAD
 from repro.kernels import ops, ref
 
-SUM_PROG = """
-.input edge
-.output tot
-tot(x, SUM(y)) :- edge(x, y).
-"""
-
-
 def _cfg(backend, **kw):
     d = dict(idb_cap=1 << 10, intermediate_cap=1 << 12,
              kernel_backend=backend)
@@ -30,20 +23,12 @@ def _cfg(backend, **kw):
     return EngineConfig(**d)
 
 
-def _datasets(seed=0):
-    rng = np.random.default_rng(seed)
-    return {
-        "TC": (TC, {"edge": rng.integers(0, 16, size=(40, 2))}),
-        "SG": (SG, {"par": rng.integers(0, 12, size=(30, 2))}),
-        "Reach": (REACH, {"edge": rng.integers(0, 40, size=(60, 2)),
-                          "source": np.array([[0]])}),
-        "Count": (DEGREE, {"edge": rng.integers(0, 16, size=(40, 2))}),
-        "Sum": (SUM_PROG, {"edge": rng.integers(0, 16, size=(40, 2))}),
-    }
+# shared with tests/test_sharded.py — one corpus, two equivalence axes
+_datasets = equivalence_datasets
 
 
 @pytest.mark.parametrize("program", ["TC", "SG", "Reach", "Count",
-                                     "Sum"])
+                                     "Sum", "Negation"])
 def test_fixpoint_backend_equivalence(program):
     """jnp and Pallas backends: byte-identical relations, identical
     iteration counts."""
@@ -183,6 +168,73 @@ def test_backend_probe_objects_agree():
             np.asarray(bk.probe_lo(jnp.asarray(build),
                                    jnp.asarray(probe))),
             np.asarray(jl))
+
+
+# -- membership through the dispatch seam ------------------------------------
+
+def _membership_oracle(left_rows, l_keys, right_rows, r_keys):
+    rset = {tuple(r[c] for c in r_keys) for r in right_rows}
+    return np.array(
+        [tuple(r[c] for c in l_keys) in rset for r in left_rows])
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_membership_backend_equivalence(seed):
+    """relops.membership probes through the injected backend. The probe
+    side (left's key columns) is generally UNSORTED — the Pallas path
+    must sort-and-scatter and still agree bit-for-bit with jnp."""
+    from repro.engine import relops as R
+    from repro.engine.relation import from_numpy
+
+    rng = np.random.default_rng(seed)
+    left = from_numpy(rng.integers(0, 12, size=(40, 2)), 64)
+    right = from_numpy(rng.integers(0, 12, size=(25, 2)), 32)
+    l_keys, r_keys = (1,), (0,)   # left col 1 is unsorted in row order
+    want = _membership_oracle(
+        np.asarray(left.data[:int(left.n)]), l_keys,
+        np.asarray(right.data[:int(right.n)]), r_keys)
+    for bk in (JnpDispatch(), PallasDispatch(interpret=True)):
+        got = np.asarray(R.membership(left, right, l_keys, r_keys,
+                                      backend=bk))
+        np.testing.assert_array_equal(got[:int(left.n)], want)
+        assert not got[int(left.n):].any()   # dead rows never members
+
+
+def test_membership_backend_empty_and_pad():
+    """Adversarial shapes: empty right side and all-dead left rows."""
+    from repro.engine import relops as R
+    from repro.engine.relation import empty, from_numpy
+
+    left = from_numpy(np.array([[3, 1], [7, 2]]), 16)
+    right = empty(8, 2)
+    dead = empty(16, 2)
+    occupied = from_numpy(np.array([[3, 9]]), 8)
+    for bk in (JnpDispatch(), PallasDispatch(interpret=True)):
+        assert not np.asarray(
+            R.membership(left, right, (0,), (0,), backend=bk)).any()
+        assert not np.asarray(
+            R.membership(dead, occupied, (0,), (0,), backend=bk)).any()
+        got = np.asarray(
+            R.membership(left, occupied, (0,), (0,), backend=bk))
+        np.testing.assert_array_equal(got[:2], [True, False])
+
+
+def test_difference_backend_equivalence():
+    """difference (the PRESENCE semi-naive delta) agrees across
+    backends including the n/arity metadata."""
+    from repro.engine import relops as R
+    from repro.engine.relation import from_numpy
+
+    rng = np.random.default_rng(11)
+    a = from_numpy(rng.integers(0, 10, size=(30, 2)), 64)
+    b = from_numpy(rng.integers(0, 10, size=(30, 2)), 64)
+    outs = []
+    for bk in (JnpDispatch(), PallasDispatch(interpret=True)):
+        rel, ov = R.difference(a, b, backend=bk)
+        assert not bool(ov)
+        outs.append((np.asarray(rel.data), int(rel.n)))
+    np.testing.assert_array_equal(outs[0][0], outs[1][0])
+    assert outs[0][1] == outs[1][1]
 
 
 def test_backend_segment_reduce_int_identities():

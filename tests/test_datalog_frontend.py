@@ -92,3 +92,36 @@ def test_mutual_recursion_same_stratum():
 def test_arity_mismatch_rejected():
     with pytest.raises(ValueError, match="arity"):
         parse_program("p(x) :- e(x, y).\np(x, y) :- e(x, y).")
+
+
+def test_wide_idb_head_rejected_at_compile_time():
+    """IDB heads storing >= 4 columns exceed the engine's packed row key
+    (relation.pack_columns packs at most 3); the compiler must reject
+    them up front with an error naming the rule, not fail at runtime
+    deep in the semi-naive merge (ROADMAP 'Wide heads')."""
+    from repro.core.optimizer import compile_program
+    from repro.core.optimizer.pipeline import LoweringError
+
+    with pytest.raises(LoweringError, match=r"'w'.*4 head columns"):
+        compile_program("""
+        .input e
+        .output w
+        w(a, b, c, d) :- e(a, b), e(b, c), e(c, d).
+        """)
+    # the error names the offending rule
+    try:
+        compile_program("w(a,b,c,d) :- e(a,b), e(b,c), e(c,d).")
+    except LoweringError as ex:
+        assert "w(a, b, c, d)" in str(ex)
+    else:
+        raise AssertionError("wide head not rejected")
+
+    # 3 stored columns stay supported...
+    compile_program("t(a, b, c) :- e(a, b), e(b, c).")
+    # ...and a monoid IDB stores its lattice value out-of-row, so a
+    # 4-column head with an aggregate is still 3 packed columns
+    compile_program("""
+    .input e
+    .output m
+    m(a, b, c, MIN(d)) :- e(a, b, c, d), m(b, c, a, d).
+    """)

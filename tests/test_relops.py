@@ -78,6 +78,23 @@ def test_semijoin_antijoin():
     assert to_numpy(anti).tolist() == [[1, 2]]
 
 
+def test_semijoin_zero_key_ground_guard():
+    """Zero-key semijoin (ground guard: 'is right non-empty?') keeps
+    exactly the live left rows — regression: the PAD tail must not be
+    resurrected as live rows (it made guarded fixpoints never drain)."""
+    left = rel_of([[0, 1], [1, 2]])
+    occupied = rel_of([[9]])
+    semi, _ = R.semijoin(left, occupied, (), ())
+    assert int(semi.n) == 2
+    assert to_numpy(semi).tolist() == [[0, 1], [1, 2]]
+    emptied = Relation(occupied.data, occupied.val,
+                       jnp.zeros((), jnp.int32))
+    semi, _ = R.semijoin(left, emptied, (), ())
+    assert int(semi.n) == 0
+    anti, _ = R.antijoin(left, emptied, (), ())
+    assert int(anti.n) == 2
+
+
 def test_difference():
     a = rel_of([[1, 1], [2, 2], [3, 3]])
     b = rel_of([[2, 2]])

@@ -1,0 +1,189 @@
+"""Sharded-vs-single-device equivalence (engine/shard.py).
+
+The contract mirrors PR 1's backend equivalence: ``ShardedEngine`` must
+produce byte-identical fixpoints and identical iteration counts to
+``Engine`` at every shard count, under either kernel backend, in both
+host and device modes — sharding changes where rows live, never what is
+derived.
+
+Run standalone (or via ``make test-sharded`` / the CI ``sharded`` step)
+with ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` so all
+shard counts execute; inside the full suite, cases needing more devices
+than are visible skip. Importing this module first (before jax device
+init) sets the flag itself.
+"""
+from benchmarks.hostdevices import force_host_device_count
+
+force_host_device_count()  # must precede the first jax device init
+
+import numpy as np
+import pytest
+
+import jax
+
+from benchmarks.programs import CC, TC, equivalence_datasets
+from repro.core.optimizer import compile_program
+from repro.engine import Engine, EngineConfig, make_engine
+from repro.engine.shard import ShardedEngine, ShardedRelation
+
+SHARD_COUNTS = (1, 2, 4, 8)
+
+
+def _cfg(**kw):
+    d = dict(idb_cap=1 << 10, intermediate_cap=1 << 12,
+             kernel_backend="jnp")
+    d.update(kw)
+    return EngineConfig(**d)
+
+
+def _need(shards: int):
+    if shards > len(jax.devices()):
+        pytest.skip(f"needs {shards} devices "
+                    f"(XLA_FLAGS=--xla_force_host_platform_device_count)")
+
+
+# shared with tests/test_backend_equivalence.py — one corpus pins both
+# equivalence axes (kernel backends there, shard counts here)
+_datasets = equivalence_datasets
+
+
+def _assert_equivalent(src, edbs, sharded_cfg, single_cfg=None):
+    out_s, st_s = Engine(compile_program(src),
+                         single_cfg or _cfg()).run(dict(edbs))
+    # ShardedEngine directly (not make_engine) so shards=1 also
+    # exercises the sharded driver on a 1-device mesh
+    eng = ShardedEngine(compile_program(src), sharded_cfg)
+    out_p, st_p = eng.run(dict(edbs))
+    assert out_s.keys() == out_p.keys()
+    for name in out_s:
+        np.testing.assert_array_equal(out_s[name], out_p[name])
+        assert out_s[name].dtype == out_p[name].dtype
+    assert st_s.iterations == st_p.iterations
+    return eng
+
+
+@pytest.mark.parametrize("shards", SHARD_COUNTS)
+@pytest.mark.parametrize("program", ["TC", "SG", "Reach", "Count", "Sum"])
+def test_sharded_fixpoint_equivalence(program, shards):
+    """Byte-identical relations + identical iteration counts at every
+    shard count, for graph recursion, mutual recursion, and stratified
+    COUNT/SUM aggregation."""
+    _need(shards)
+    src, edbs = _datasets()[program]
+    eng = _assert_equivalent(src, edbs, _cfg(shards=shards))
+    assert eng.num_shards == shards
+
+
+@pytest.mark.parametrize("shards", (2, 8))
+def test_sharded_monoid_lattice(shards):
+    """MIN-monoid fixpoint (CC): lattice values combine across shards
+    exactly as on one device."""
+    _need(shards)
+    rng = np.random.default_rng(3)
+    edbs = {"edge": rng.integers(0, 30, size=(50, 2))}
+    _assert_equivalent(CC, edbs, _cfg(shards=shards))
+
+
+@pytest.mark.parametrize("shards", (2, 4))
+def test_sharded_negation(shards):
+    """Stratified negation: the sharded antijoin/membership path (and
+    the psum'd zero-key ground guard) agree with single-device."""
+    _need(shards)
+    src, edbs = _datasets()["Negation"]
+    _assert_equivalent(src, edbs, _cfg(shards=shards))
+
+
+def test_sharded_device_mode():
+    """The whole-stratum while_loop runs inside shard_map with a psum
+    termination test; results and iteration counts still match the
+    single-device device mode."""
+    _need(4)
+    src, edbs = _datasets()["TC"]
+    _assert_equivalent(src, edbs, _cfg(shards=4, mode="device"),
+                       single_cfg=_cfg(mode="device"))
+
+
+def test_sharded_composes_with_pallas_backend():
+    """sharded x pallas: the kernel dispatch runs shard-locally under
+    shard_map (interpret mode on CPU) and stays byte-identical to the
+    single-device jnp engine."""
+    _need(2)
+    src, edbs = _datasets()["TC"]
+    _assert_equivalent(src, edbs,
+                       _cfg(shards=2, kernel_backend="pallas"))
+
+
+def test_sharded_skewed_keys():
+    """Every edge shares one source node: the join key hashes to a
+    single shard (worst-case skew) — still correct, just imbalanced."""
+    _need(8)
+    edbs = {"edge": np.stack(
+        [np.zeros(30, int), np.arange(30)], axis=1)}
+    _assert_equivalent(TC, edbs, _cfg(shards=8))
+
+
+def test_sharded_empty_shards():
+    """Fewer live rows than shards: most shards hold nothing at every
+    iteration and the fixpoint still terminates identically."""
+    _need(8)
+    edbs = {"edge": np.array([[1, 2], [2, 3]])}
+    _assert_equivalent(TC, edbs, _cfg(shards=8))
+
+
+def test_sharded_empty_edb():
+    _need(4)
+    edbs = {"edge": np.zeros((0, 2), int)}
+    _assert_equivalent(TC, edbs, _cfg(shards=4))
+
+
+def test_make_engine_selection():
+    prog = compile_program(TC)
+    assert type(make_engine(prog)) is Engine
+    assert type(make_engine(prog, _cfg())) is Engine
+    assert type(make_engine(prog, _cfg(shards=1))) is Engine
+    _need(2)
+    assert isinstance(make_engine(prog, _cfg(shards=2)), ShardedEngine)
+
+
+def test_shard_mesh_validation():
+    import jax as j
+    from repro.launch.mesh import make_shard_mesh
+    with pytest.raises(ValueError):
+        make_shard_mesh(0)
+    with pytest.raises(ValueError):
+        make_shard_mesh(len(j.devices()) + 1)
+    m = make_shard_mesh(1)
+    assert m.axis_names == ("shards",)
+
+
+def test_sharded_relation_invariant():
+    """Partition invariant: after a run, every shard block of every IDB
+    is itself a sorted, distinct, PAD-tailed arrangement, and shard
+    assignment matches the home hash."""
+    _need(4)
+    from repro.engine.relation import PAD
+    from repro.engine.shard import shard_of
+    import jax.numpy as jnp
+
+    src, edbs = _datasets()["TC"]
+    eng = make_engine(compile_program(src), _cfg(shards=4))
+    eng.run(dict(edbs))
+    rel = eng.last_env[("tc", "full")]
+    assert isinstance(rel, ShardedRelation)
+    data = np.asarray(rel.data)
+    ns = np.asarray(rel.n)
+    assert int(ns.sum()) > 0
+    for s in range(rel.num_shards):
+        block = data[s]
+        n = int(ns[s])
+        assert np.all(block[n:] == int(PAD))          # PAD tail
+        live = block[:n]
+        if n:
+            order = np.lexsort(tuple(
+                live[:, c] for c in reversed(range(live.shape[1]))))
+            assert np.array_equal(order, np.arange(n))  # sorted
+            assert np.unique(live, axis=0).shape[0] == n  # distinct
+            dest = np.asarray(shard_of(
+                jnp.asarray(live), tuple(range(live.shape[1])),
+                jnp.ones((n,), bool), rel.num_shards))
+            assert np.all(dest == s)                  # home partition
