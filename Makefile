@@ -1,12 +1,14 @@
 # Test tiers (see pytest.ini for the `slow` marker):
 #   test-fast    — everything except the per-architecture smoke tests
 #                  (~2-3 min; the CI push tier)
-#   test-sharded — the sharded-engine equivalence suite on 8 forced
+#   test-sharded — the sharded-engine equivalence suite (including the
+#                  wide-row cases) plus the wide-row suite on 8 forced
 #                  host devices (part of the CI push tier)
 #   test         — the full tier-1 command from ROADMAP.md (~4.5 min)
 PYTEST = PYTHONPATH=src python -m pytest
 
-.PHONY: test test-fast test-sharded bench-backends bench-sharding
+.PHONY: test test-fast test-sharded bench-backends bench-sharding \
+	bench-wide
 
 test:
 	$(PYTEST) -x -q
@@ -16,7 +18,7 @@ test-fast:
 
 test-sharded:
 	XLA_FLAGS="--xla_force_host_platform_device_count=8" \
-		$(PYTEST) -x -q tests/test_sharded.py
+		$(PYTEST) -x -q tests/test_sharded.py tests/test_wide.py
 
 bench-backends:
 	PYTHONPATH=src python -m benchmarks.run --only backends
@@ -24,3 +26,6 @@ bench-backends:
 bench-sharding:
 	XLA_FLAGS="--xla_force_host_platform_device_count=8" \
 		PYTHONPATH=src python -m benchmarks.run --only sharding
+
+bench-wide:
+	PYTHONPATH=src python -m benchmarks.run --only wide

@@ -119,12 +119,80 @@ unreach(x) :- node(x), !reach(x).
 """
 
 
-def equivalence_datasets(seed: int = 0) -> dict:
-    """The shared program/EDB corpus pinned by the kernel-backend and
-    sharded-engine equivalence suites (tests/test_backend_equivalence.py,
-    tests/test_sharded.py): name -> (source, edbs). One definition so
-    the two suites cannot silently diverge."""
+# -- wide (4-6 stored columns) program family --------------------------------
+# The multi-word row-key workload class (ROADMAP "Wide heads"): Doop-
+# style analyses key rows on > 3 columns, which the engine stores as
+# ceil(arity/3)-word lexicographic keys (relation.pack_key_words).
+
+# context-sensitive reachability Reach(ctx, fn, src, dst): 4-column
+# recursive IDB — the semi-naive merge/difference runs on 2-word keys
+WIDE_REACH = """
+.input call
+.input cfg
+.output reach
+reach(c, f, x, y) :- call(c, f), cfg(f, x, y).
+reach(c, f, x, z) :- reach(c, f, x, y), cfg(f, y, z).
+"""
+
+# two-context reachability: 5-column recursive IDB whose recursive join
+# shares 4 variables — the join's count/locate probe itself is
+# multi-word, inside the fixpoint loop
+WIDE_REACH2 = """
+.input edge
+.output reach
+reach(c1, c2, f, x, y) :- edge(c1, c2, f, x, y).
+reach(c1, c2, f, x, z) :- reach(c1, c2, f, x, y), edge(c1, c2, f, y, z).
+"""
+
+# 4-key equijoin into a 6-column head, then a projection that consumes
+# it — multi-word probe + 2-word head merge, nonrecursive
+WIDE_JOIN = """
+.input a
+.input b
+.output wide
+.output narrow
+wide(c, f, x, y, u, v) :- a(c, f, x, y, u), b(c, f, x, y, v).
+narrow(u, v) :- wide(c, f, x, y, u, v).
+"""
+
+# grouped aggregation over a 4-column group key (multi-word group-key
+# boundaries in reduce_groups), 5-column stored head
+WIDE_AGG = """
+.input fact
+.output agg
+agg(c, f, x, y, COUNT(v)) :- fact(c, f, x, y, v).
+"""
+
+
+def wide_edbs(seed: int = 0) -> dict:
+    """EDBs for the wide family (small dense domains so closures are
+    nontrivial but converge in a handful of iterations)."""
     rng = np.random.default_rng(seed)
+    ctx_edge = np.concatenate(
+        [rng.integers(0, 2, size=(60, 3)),      # c1, c2, f
+         rng.integers(0, 6, size=(60, 2))], axis=1)   # x, y
+    return {
+        "WideReach": {"call": rng.integers(0, 3, size=(8, 2)),
+                      "cfg": np.concatenate(
+                          [rng.integers(0, 3, size=(50, 1)),
+                           rng.integers(0, 8, size=(50, 2))], axis=1)},
+        "WideReach2": {"edge": ctx_edge},
+        "WideJoin": {"a": rng.integers(0, 3, size=(60, 5)),
+                     "b": rng.integers(0, 3, size=(60, 5))},
+        "WideAgg": {"fact": np.concatenate(
+            [rng.integers(0, 3, size=(70, 4)),
+             rng.integers(0, 20, size=(70, 1))], axis=1)},
+    }
+
+
+def equivalence_datasets(seed: int = 0) -> dict:
+    """The shared program/EDB corpus pinned by the kernel-backend,
+    sharded-engine, and wide-row equivalence suites
+    (tests/test_backend_equivalence.py, tests/test_sharded.py,
+    tests/test_wide.py): name -> (source, edbs). One definition so the
+    suites cannot silently diverge."""
+    rng = np.random.default_rng(seed)
+    wide = wide_edbs(seed)
     return {
         "TC": (TC, {"edge": rng.integers(0, 16, size=(40, 2))}),
         "SG": (SG, {"par": rng.integers(0, 12, size=(30, 2))}),
@@ -134,7 +202,14 @@ def equivalence_datasets(seed: int = 0) -> dict:
         "Sum": (SUM_AGG, {"edge": rng.integers(0, 16, size=(40, 2))}),
         "Negation": (UNREACH, {"edge": rng.integers(0, 40, size=(60, 2)),
                                "source": np.array([[0]])}),
+        "WideReach": (WIDE_REACH, wide["WideReach"]),
+        "WideReach2": (WIDE_REACH2, wide["WideReach2"]),
+        "WideJoin": (WIDE_JOIN, wide["WideJoin"]),
+        "WideAgg": (WIDE_AGG, wide["WideAgg"]),
     }
+
+
+WIDE_PROGRAMS = ("WideReach", "WideReach2", "WideJoin", "WideAgg")
 
 
 def make_datasets(scale: float = 1.0, seed: int = 0) -> dict:

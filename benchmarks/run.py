@@ -12,7 +12,7 @@ import json
 from pathlib import Path
 
 ALL_TABLES = ("table1", "seminaive", "robustness", "specialization",
-              "incremental", "kernels", "backends", "sharding",
+              "incremental", "kernels", "backends", "sharding", "wide",
               "roofline")
 
 
@@ -44,6 +44,9 @@ def collect(only=None) -> list[dict]:
     if "sharding" in only:
         from benchmarks.sharding import bench as bench_sharding
         rows += bench_sharding()
+    if "wide" in only:
+        from benchmarks.wide import bench as bench_wide
+        rows += bench_wide()
     if "roofline" in only:
         from benchmarks.roofline import rows as roof_rows
         try:

@@ -383,22 +383,26 @@ def compile_program(
                 plans_all.append(plan)
         stratum_plans.append(sp)
 
-    # Wide heads are unsupported by the engine's packed row keys:
-    # relation.pack_columns packs at most 3 columns, and the semi-naive
-    # merge (merge_with_delta / difference) packs ALL stored head
-    # columns — so an IDB storing >= 4 data columns would fail deep in
-    # the first fixpoint iteration. Reject at compile time instead,
-    # naming an offending rule. (Monoid IDBs store the lattice value
-    # out-of-row, hence the stored arity is head arity - 1.)
+    # Capability check against the engine's physical key representation:
+    # the semi-naive merge (merge_with_delta / difference) keys ALL
+    # stored head columns with a multi-word lexicographic key
+    # (relation.pack_key_words), whose advertised ceiling is
+    # relation.MAX_STORED_COLUMNS. Arities beyond it would degrade the
+    # probe (one more word per 3 columns, unbounded kernel unroll), so
+    # reject at compile time, naming an offending rule. (Monoid IDBs
+    # store the lattice value out-of-row, hence the stored arity is
+    # head arity - 1.)
+    from repro.engine.relation import MAX_STORED_COLUMNS
     for st in strata:
         for rule in st.rules:
             name = rule.head_name
             stored = arities[name] - (1 if name in monoid_idbs else 0)
-            if stored > 3:
+            if stored > MAX_STORED_COLUMNS:
                 raise LoweringError(
                     f"IDB {name!r} stores {stored} head columns, but the "
-                    f"engine's packed row key supports at most 3 (see "
-                    f"ROADMAP 'Wide heads'); offending rule: {rule}")
+                    f"engine's multi-word row key supports at most "
+                    f"{MAX_STORED_COLUMNS} (relation.MAX_STORED_COLUMNS; "
+                    f"see ROADMAP 'Wide heads'); offending rule: {rule}")
 
     # monoid consistency: every rule deriving a monoid IDB must emit the
     # value column; non-aggregate rules for a monoid IDB are treated as

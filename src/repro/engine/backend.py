@@ -18,9 +18,19 @@ optimizer. Concretely, two primitives dominate the fixpoint hot path:
       ``searchsorted`` does not — membership only pays the probe-side
       sort where the kernel needs it.
 
+  probe_multi(build_words, probe_words) -> (lo, hi)
+      The same ranks for multi-word lexicographic keys ([*, W] int64
+      word vectors, relation.pack_key_words; dead rows = KEY_PAD in
+      every word) — the wide-relation generalization. relops squeezes
+      W = 1 keys onto ``probe`` so narrow programs keep the exact
+      single-word fast path; ``probe_multi`` only runs for keys of
+      >= 4 columns (or under relation.force_multiword()).
+
   segment_reduce(values, seg_ids, num_segments, op) -> [num_segments]
       Sorted-segment aggregation (op in sum/min/max) behind
-      ``relops.reduce_groups`` (Datalog COUNT/SUM/MIN/MAX).
+      ``relops.reduce_groups`` (Datalog COUNT/SUM/MIN/MAX) and the
+      duplicate-combine of ``relops.dedupe`` for valued semirings
+      (COUNTING multiplicities, MIN/MAX lattice merge).
 
 A ``KernelDispatch`` bundles one implementation of each. Two are
 provided:
@@ -58,7 +68,8 @@ in tests/test_backend_equivalence.py pin down):
     byte-identical relations.
 
 Ops NOT yet dispatched (still pure jnp, candidates for future kernels):
-``dedupe``'s duplicate-combine and the bounded expand of ``join``.
+the bounded expand of ``join`` and a fused dedupe-compare kernel.
+``dedupe``'s duplicate-combine now routes through ``segment_reduce``.
 See ROADMAP "Open items".
 """
 from __future__ import annotations
@@ -93,6 +104,18 @@ class KernelDispatch:
         form is cheaper override it."""
         return self.probe(build_keys, probe_keys)[0]
 
+    def probe_multi(self, build_words: jax.Array,
+                    probe_words: jax.Array):
+        """(lo, hi) int32 ranks of [n, W] probe word vectors in sorted
+        [m, W] build word vectors under word-wise lexicographic order
+        (the multi-word key contract of relation.pack_key_words)."""
+        raise NotImplementedError
+
+    def probe_lo_multi(self, build_words: jax.Array,
+                       probe_words: jax.Array):
+        """Lower rank only, multi-word keys."""
+        return self.probe_multi(build_words, probe_words)[0]
+
     def segment_reduce(self, values: jax.Array, seg_ids: jax.Array,
                        num_segments: int, op: str) -> jax.Array:
         """Reduce ``values`` [n] over sorted ``seg_ids`` (out-of-range
@@ -119,6 +142,10 @@ class JnpDispatch(KernelDispatch):
         return jnp.searchsorted(build_keys, probe_keys,
                                 side="left").astype(jnp.int32)
 
+    def probe_multi(self, build_words, probe_words):
+        return ops.merge_probe_multi(build_words, probe_words,
+                                     backend="xla")
+
     def segment_reduce(self, values, seg_ids, num_segments, op):
         return ops.segment_reduce(values, seg_ids, num_segments, op,
                                   backend="xla")
@@ -138,6 +165,10 @@ class PallasDispatch(KernelDispatch):
     def probe(self, build_keys, probe_keys):
         return ops.merge_probe_counts(build_keys, probe_keys,
                                       backend=self._mode)
+
+    def probe_multi(self, build_words, probe_words):
+        return ops.merge_probe_multi(build_words, probe_words,
+                                     backend=self._mode)
 
     def segment_reduce(self, values, seg_ids, num_segments, op):
         # The kernel accumulates integer inputs natively in int32

@@ -133,8 +133,9 @@ class Engine:
         repartition rows to the head's home shard (equal rows must
         co-locate before the duplicate-combine)."""
         if len(rels) == 1:
-            return R.dedupe(rels[0].data, rels[0].val, sr, cap)
-        return R.concat_all(rels, sr, cap)
+            return R.dedupe(rels[0].data, rels[0].val, sr, cap,
+                            backend=self.backend)
+        return R.concat_all(rels, sr, cap, backend=self.backend)
 
     def _eval_plans(self, plans, env: Env, ev: Evaluator):
         """Evaluate plans, concat per head IDB -> derived relations."""
@@ -212,7 +213,8 @@ class Engine:
         for name in idbs:
             full, delta = state[name]
             sr = self._sr_of(name)
-            full_new, ov = R.merge(full, delta, sr, self._idb_cap(name))
+            full_new, ov = R.merge(full, delta, sr, self._idb_cap(name),
+                                   backend=self.backend)
             ovf |= ov
             env_rels[(name, I.FULL)] = full
             env_rels[(name, I.FULL_OLD)] = full
@@ -341,7 +343,8 @@ class Engine:
         for name in idbs:
             full, delta = state[name]
             sr = self._sr_of(name)
-            merged, ov = R.merge(full, delta, sr, self._idb_cap(name))
+            merged, ov = R.merge(full, delta, sr, self._idb_cap(name),
+                                 backend=self.backend)
             if bool(ov):
                 raise OverflowError_(f"overflow finalizing {name}")
             full_env[(name, I.FULL)] = merged

@@ -18,6 +18,13 @@ This module maintains materialized IDBs under EDB insertions/deletions:
   fixpoint. Monoid (MIN/MAX) IDBs fall back to stratum recompute on
   deletion — lattice values cannot be 'un-improved' without support
   counting (documented limitation; matches DESIGN.md §5).
+
+Wide (>= 4-column) IDBs maintain like narrow ones: the seed unions,
+candidate semijoins, and full-relation differences all key on every
+stored column, which the relops resolve with multi-word lexicographic
+keys (relation.pack_key_words) — seeded continuations never see the
+arity (tests/test_wide.py pins insert and delete against batch
+recompute).
 """
 from __future__ import annotations
 
@@ -286,7 +293,8 @@ class IncrementalEngine:
         for head, rels_ in derived.items():
             sr = self.engine._sr_of(head)
             merged, ov = R.concat_all(
-                rels_, sr, self.engine._idb_cap(head))
+                rels_, sr, self.engine._idb_cap(head),
+                backend=self.engine.backend)
             seeds[head] = merged
         return seeds
 
@@ -339,7 +347,8 @@ class IncrementalEngine:
         # 2. remove candidates from stored fulls
         for name, cand in candidates.items():
             full = self._env[(name, I.FULL)]
-            reduced, _ = R.difference(full, cand)
+            reduced, _ = R.difference(full, cand,
+                                      backend=self.engine.backend)
             self._env[(name, I.FULL)] = reduced
 
         # 3. re-derive: run rules against the reduced state; anything still
@@ -361,11 +370,13 @@ class IncrementalEngine:
             if cand is not None:
                 out, _ = R.semijoin(
                     out, cand, tuple(range(out.arity)),
-                    tuple(range(cand.arity)))
+                    tuple(range(cand.arity)),
+                    backend=self.engine.backend)
             if p.head in rederive:
                 merged, _ = R.concat_all(
                     [rederive[p.head], out], sr,
-                    self.engine._idb_cap(p.head))
+                    self.engine._idb_cap(p.head),
+                    backend=self.engine.backend)
                 rederive[p.head] = merged
             else:
                 rederive[p.head] = out
@@ -379,7 +390,8 @@ class IncrementalEngine:
                     sr = self.engine._sr_of(head)
                     rederive[head], _ = R.concat_all(
                         [rederive[head], rel], sr,
-                        self.engine._idb_cap(head))
+                        self.engine._idb_cap(head),
+                        backend=self.engine.backend)
                 else:
                     rederive[head] = rel
         self._continue_fixpoint(sp, rederive)

@@ -120,7 +120,8 @@ class Evaluator:
 
     # -- physical-op hooks ---------------------------------------------------
     def _dedupe_op(self, data, val, out_cap):
-        return R.dedupe(data, val, self.cfg.semiring, out_cap)
+        return R.dedupe(data, val, self.cfg.semiring, out_cap,
+                        backend=self.cfg.backend)
 
     def _join_op(self, left, right, l_keys, r_keys, l_out, r_out, out_cap):
         return R.join(left, right, l_keys, r_keys, l_out, r_out,
@@ -136,7 +137,8 @@ class Evaluator:
                           self.cfg.semiring, backend=self.cfg.backend)
 
     def _concat_op(self, rels, out_cap):
-        return R.concat_all(rels, self.cfg.semiring, out_cap)
+        return R.concat_all(rels, self.cfg.semiring, out_cap,
+                            backend=self.cfg.backend)
 
     def _reduce_op(self, child, group_cols, agg_specs, out_cap):
         return R.reduce_groups(child, group_cols, agg_specs, out_cap,
@@ -301,6 +303,7 @@ class Evaluator:
         if perm != list(range(len(perm))):
             data = reduced.data[:, jnp.array(perm)]
             reduced, ov2 = R.dedupe(data, None, self.cfg.semiring,
-                                    reduced.capacity)
+                                    reduced.capacity,
+                                    backend=self.cfg.backend)
             ov = ov | ov2
         return reduced, ovf | ov

@@ -10,8 +10,43 @@ A ``Relation`` is a struct-of-arrays pytree:
 Invariants maintained by every relop:
   * rows [0, n) are live, rows [n, cap) are PAD (all-PAD columns,
     identity payload);
-  * live rows are sorted by packed row key and duplicate-free
-    (an "arrangement" in DD terms — the sorted array IS the index).
+  * live rows are sorted lexicographically by their columns and
+    duplicate-free (an "arrangement" in DD terms — the sorted array IS
+    the index).
+
+Multi-word arrangement contract
+===============================
+
+Row/join keys are **multi-word lexicographic keys**: ``pack_key_words``
+maps ``k`` selected columns to a ``(ceil(k/3),)``-vector of int64 words
+(``key_width`` words of up to ``KEY_CHUNK`` = 3 columns each, packed
+with the monotone bit scheme of ``pack_columns``). The contract every
+probe/merge consumer relies on:
+
+  * **Order isomorphism.** Comparing word vectors lexicographically is
+    identical to comparing the selected column tuples lexicographically
+    — each word packs its column chunk monotonically, and chunks are
+    emitted in column order. Hence an arrangement sorted by columns is
+    automatically sorted by its key words, for any arity.
+  * **PAD sentinel per word.** Dead rows map to ``KEY_PAD`` in *every*
+    word, so they sort last under the word-wise order exactly as they
+    do under the column order (PAD is the int32 maximum in every data
+    column).
+  * **Single-word fast path.** For keys of <= 3 columns, ``key_width``
+    is 1 and word 0 is bit-for-bit the legacy ``pack_columns`` key —
+    consumers squeeze to the 1-D probe seam, so narrow programs execute
+    the exact pre-multiword code path (zero overhead, byte-identical
+    fixpoints).
+  * **Value range.** As with the legacy packed key, full 3-column words
+    assume non-negative values < 2**21 (the paper pre-hashes strings to
+    dense ints); 1- and 2-column words are safe for any non-negative
+    int32.
+
+``MAX_STORED_COLUMNS`` (= 8, i.e. up to 3 key words) is the advertised
+capability ceiling for *stored* IDB arities — the optimizer pipeline
+checks it at compile time (core/optimizer/pipeline.py) so programs
+beyond it fail with a friendly error naming the rule rather than deep
+in a fixpoint. The relops themselves accept any width.
 
 XLA needs static shapes, so data-dependent outputs (joins) write into
 bounded buffers and report overflow; the engine retries with doubled
@@ -21,6 +56,7 @@ guarantees here.
 """
 from __future__ import annotations
 
+import contextlib
 from typing import NamedTuple, Optional
 
 import jax
@@ -35,6 +71,18 @@ import numpy as np
 
 PAD = jnp.iinfo(jnp.int32).max
 KEY_PAD = jnp.iinfo(jnp.int64).max
+
+# columns packed per key word (21 bits each in a full word)
+KEY_CHUNK = 3
+# capability ceiling for stored IDB arities (compile-time check in
+# core/optimizer/pipeline.py); key_width(8) = 3 words
+MAX_STORED_COLUMNS = 8
+
+# test/bench hook (see force_multiword): when true, pack_key_words
+# appends a constant extra word so even narrow keys take the multi-word
+# path — used to pin multi-word semantics against the narrow corpus and
+# to measure the word-loop overhead (benchmarks/wide.py).
+_FORCE_MULTIWORD = False
 
 
 class Relation(NamedTuple):
@@ -105,9 +153,11 @@ def to_numpy_with_val(rel: Relation) -> tuple[np.ndarray, np.ndarray]:
 def pack_columns(data: jax.Array, cols: tuple[int, ...],
                  live: jax.Array) -> jax.Array:
     """Pack selected (join-key) columns into a single monotone int64 key;
-    dead rows map to KEY_PAD so they sort last. Join keys of 1-2 columns
+    dead rows map to KEY_PAD so they sort last. Keys of 1-2 columns
     are always safe (31 bits each for non-negative int32); 3 columns
-    assume values < 2^21 (the paper pre-hashes strings to dense ints)."""
+    assume values < 2^21 (the paper pre-hashes strings to dense ints).
+    This is the single-word primitive — wider keys go through
+    ``pack_key_words``."""
     k = len(cols)
     if k == 0:
         key = jnp.zeros((data.shape[0],), jnp.int64)
@@ -115,11 +165,49 @@ def pack_columns(data: jax.Array, cols: tuple[int, ...],
     bits = {1: 62, 2: 31, 3: 21}.get(k)
     if bits is None:
         raise ValueError(
-            f"join keys of {k} columns unsupported (pack overflow)")
+            f"pack_columns packs at most {KEY_CHUNK} columns per word "
+            f"(got {k}); use pack_key_words for wider keys")
     key = jnp.zeros((data.shape[0],), jnp.int64)
     for c in cols:
         key = (key << bits) | data[:, c].astype(jnp.int64)
     return jnp.where(live, key, KEY_PAD)
+
+
+def key_width(num_cols: int) -> int:
+    """Words needed to key ``num_cols`` columns (>= 1; 3 cols/word)."""
+    return max(1, -(-num_cols // KEY_CHUNK))
+
+
+def pack_key_words(data: jax.Array, cols: tuple[int, ...],
+                   live: jax.Array) -> jax.Array:
+    """Multi-word lexicographic key: int64[rows, key_width(len(cols))].
+
+    Columns are packed KEY_CHUNK at a time into monotone words, so
+    comparing word vectors lexicographically == comparing the column
+    tuples lexicographically (see module docstring). Dead rows map to
+    KEY_PAD in every word. For <= 3 columns this is exactly
+    ``pack_columns(...)[:, None]`` — the single-word fast path."""
+    words = [pack_columns(data, cols[i:i + KEY_CHUNK], live)
+             for i in range(0, max(len(cols), 1), KEY_CHUNK)]
+    if _FORCE_MULTIWORD:
+        words.append(jnp.where(live, jnp.int64(0), KEY_PAD))
+    return jnp.stack(words, axis=1)
+
+
+@contextlib.contextmanager
+def force_multiword():
+    """Test/bench hook: make every key >= 2 words by appending a
+    constant word (0 for live rows, KEY_PAD for dead — order- and
+    semantics-preserving). Narrow programs then execute the multi-word
+    probe/merge path end-to-end, which pins the wide machinery against
+    the narrow corpus and measures its overhead."""
+    global _FORCE_MULTIWORD
+    prev = _FORCE_MULTIWORD
+    _FORCE_MULTIWORD = True
+    try:
+        yield
+    finally:
+        _FORCE_MULTIWORD = prev
 
 
 def live_mask(rel: Relation) -> jax.Array:
@@ -131,6 +219,16 @@ def lex_order(data: jax.Array) -> jax.Array:
     rows sort last (PAD is the int32 maximum in every column)."""
     arity = data.shape[1]
     return jnp.lexsort(tuple(data[:, c] for c in range(arity - 1, -1, -1)))
+
+
+def lex_order_words(words: jax.Array) -> jax.Array:
+    """Ordering permutation for multi-word keys [rows, W]: lexicographic
+    by word 0, 1, ...; all-KEY_PAD (dead) rows sort last. For W = 1 this
+    is ``jnp.argsort(words[:, 0])``."""
+    w = words.shape[1]
+    if w == 1:
+        return jnp.argsort(words[:, 0])
+    return jnp.lexsort(tuple(words[:, c] for c in range(w - 1, -1, -1)))
 
 
 def rows_equal_prev(data: jax.Array) -> jax.Array:

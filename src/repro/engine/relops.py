@@ -8,10 +8,17 @@ code lowers under pjit/shard_map for scale-out (DESIGN.md §7).
 
 Hot physical primitives (the join's count/locate probe, the
 merge_with_delta lattice lookup, the membership probe behind
-semijoin/antijoin/difference, and grouped segment aggregation) are
-not hard-coded: ops take an injected ``KernelDispatch``
-(engine/backend.py) that routes them to the Pallas TPU kernels or the
-pure-jnp fallback. ``backend=None`` means jnp.
+semijoin/antijoin/difference, grouped segment aggregation, and
+``dedupe``'s duplicate-combine) are not hard-coded: ops take an
+injected ``KernelDispatch`` (engine/backend.py) that routes them to
+the Pallas TPU kernels or the pure-jnp fallback. ``backend=None``
+means jnp.
+
+Row keys are multi-word lexicographic (relation.pack_key_words): keys
+of <= 3 columns stay on the legacy single-word probe seam bit-for-bit
+(the narrow fast path), wider keys probe word vectors through
+``probe_multi`` — which is how relations of any arity flow through
+join/membership/merge unchanged at the logical level.
 
 Correspondence to DD operators (paper Sec. 2.3):
     arrange        -> ``arrange`` (sort by join-key prefix)
@@ -32,10 +39,24 @@ import jax.numpy as jnp
 
 from repro.engine.backend import JNP, KernelDispatch
 from repro.engine.relation import (
-    KEY_PAD, PAD, Relation, lex_order, live_mask, pack_columns,
-    rows_equal_prev,
+    KEY_PAD, PAD, Relation, lex_order, lex_order_words, live_mask,
+    pack_key_words, rows_equal_prev,
 )
 from repro.engine.semiring import Semiring, PRESENCE
+
+
+def _probe_ranks(bk: KernelDispatch, build_words, probe_words):
+    """(lo, hi) ranks for [*, W] key-word vectors; W = 1 squeezes onto
+    the legacy single-word seam (the narrow fast path)."""
+    if build_words.shape[1] == 1:
+        return bk.probe(build_words[:, 0], probe_words[:, 0])
+    return bk.probe_multi(build_words, probe_words)
+
+
+def _probe_lo_ranks(bk: KernelDispatch, build_words, probe_words):
+    if build_words.shape[1] == 1:
+        return bk.probe_lo(build_words[:, 0], probe_words[:, 0])
+    return bk.probe_lo_multi(build_words, probe_words)
 
 
 def _take_rows(data: jax.Array, idx: jax.Array) -> jax.Array:
@@ -60,10 +81,17 @@ def _scatter_compact(data, val, keep, out_cap, val_identity):
 
 
 def dedupe(data: jax.Array, val: Optional[jax.Array], sr: Semiring,
-           out_cap: int, assume_sorted: bool = False):
+           out_cap: int, assume_sorted: bool = False,
+           backend: Optional[KernelDispatch] = None):
     """Sort rows, combine duplicate rows' values with ``sr.add`` (presence:
     drop duplicates), emit sorted distinct rows. PAD rows (data == PAD in
-    every column) are dropped. Returns (Relation, overflow)."""
+    every column) are dropped. Returns (Relation, overflow).
+
+    The duplicate-combine is a sorted-segment reduction (segment ids
+    ascend because rows are sorted; dead rows map out of range), so it
+    dispatches through the injected ``backend`` exactly like
+    ``reduce_groups``."""
+    bk = backend or JNP
     if sr.has_value and val is None:
         val = jnp.ones((data.shape[0],), sr.dtype)  # implicit lift (Sec. 8)
     if not assume_sorted:
@@ -80,9 +108,8 @@ def dedupe(data: jax.Array, val: Optional[jax.Array], sr: Semiring,
     if val is not None and sr.has_value:
         seg = jnp.cumsum(first.astype(jnp.int32)) - 1
         seg = jnp.where(live, seg, data.shape[0])  # drop dead rows
-        agg = jax.ops.segment_sum if sr.name == "counting" else (
-            jax.ops.segment_min if sr.name == "min" else jax.ops.segment_max)
-        combined = agg(val, seg, num_segments=data.shape[0])
+        op = "sum" if sr.name == "counting" else sr.name
+        combined = bk.segment_reduce(val, seg, data.shape[0], op)
         # positions of firsts get the combined value
         val = jnp.where(first, combined[jnp.cumsum(first) - 1], val)
         if sr.name == "counting":
@@ -138,16 +165,17 @@ def join(left: Relation, right: Relation,
     consumers (Join-FlatMap) can filter/project before compaction.
 
     The count/locate phase (probe ranks) goes through the injected
-    ``backend`` (backend.py): both sides are arrangements, so the packed
-    key arrays are sorted and the blocked Pallas merge-path probe
-    applies. The bounded expand stays jnp."""
+    ``backend`` (backend.py): both sides are arrangements, so the key
+    word vectors are sorted and the blocked Pallas merge-path probe
+    applies — single-word for <= 3 key columns (the narrow fast path),
+    word-wise for wider keys. The bounded expand stays jnp."""
     bk = backend or JNP
     if not arranged:
         left = arrange(left, l_keys)
         right = arrange(right, r_keys)
-    lk = pack_columns(left.data, l_keys, live_mask(left))
-    rk = pack_columns(right.data, r_keys, live_mask(right))
-    lo, hi = bk.probe(rk, lk)
+    lk = pack_key_words(left.data, l_keys, live_mask(left))
+    rk = pack_key_words(right.data, r_keys, live_mask(right))
+    lo, hi = _probe_ranks(bk, rk, lk)
     counts = jnp.where(live_mask(left), hi - lo, 0)
     offsets = jnp.cumsum(counts)
     li, within, valid, total = expand_indices(counts, offsets, out_cap)
@@ -194,14 +222,14 @@ def membership(left: Relation, right: Relation,
         # tail as live rows and the fixpoint would never drain)
         return jnp.broadcast_to(right.n > 0, (left.capacity,)) & (
             live_mask(left))
-    lk = pack_columns(left.data, l_keys, live_mask(left))
-    rk = pack_columns(right.data, r_keys, live_mask(right))
+    lk = pack_key_words(left.data, l_keys, live_mask(left))
+    rk = pack_key_words(right.data, r_keys, live_mask(right))
     if bk.needs_sorted_probe:
-        order = jnp.argsort(lk)
-        lo, hi = bk.probe(rk, lk[order])
+        order = lex_order_words(lk)
+        lo, hi = _probe_ranks(bk, rk, jnp.take(lk, order, axis=0))
         found = jnp.zeros((left.capacity,), bool).at[order].set(hi > lo)
     else:
-        lo, hi = bk.probe(rk, lk)
+        lo, hi = _probe_ranks(bk, rk, lk)
         found = hi > lo
     return found & live_mask(left)
 
@@ -239,7 +267,8 @@ def difference(a: Relation, b: Relation,
     return antijoin(a, b, cols, cols, backend=backend)
 
 
-def concat_all(rels: Sequence[Relation], sr: Semiring, out_cap: int):
+def concat_all(rels: Sequence[Relation], sr: Semiring, out_cap: int,
+               backend: Optional[KernelDispatch] = None):
     """Multiway union with value combine (ConcatAll, Sec. 4)."""
     data = jnp.concatenate([r.data for r in rels], axis=0)
     val = None
@@ -247,12 +276,13 @@ def concat_all(rels: Sequence[Relation], sr: Semiring, out_cap: int):
         val = jnp.concatenate(
             [r.val if r.val is not None
              else jnp.ones((r.capacity,), sr.dtype) for r in rels])
-    return dedupe(data, val, sr, out_cap)
+    return dedupe(data, val, sr, out_cap, backend=backend)
 
 
-def merge(full: Relation, delta: Relation, sr: Semiring, out_cap: int):
+def merge(full: Relation, delta: Relation, sr: Semiring, out_cap: int,
+          backend: Optional[KernelDispatch] = None):
     """full ∪ delta with sr.add combine. Returns (Relation, overflow)."""
-    return concat_all([full, delta], sr, out_cap)
+    return concat_all([full, delta], sr, out_cap, backend=backend)
 
 
 def merge_with_delta(full: Relation, derived: Relation, sr: Semiring,
@@ -265,19 +295,27 @@ def merge_with_delta(full: Relation, derived: Relation, sr: Semiring,
     This single primitive is the semi-naive frontier step (Sec. 2.2) and
     the monoid iteration of Sec. 9.
     """
-    new_full, ov1 = merge(full, derived, sr, out_cap)
+    new_full, ov1 = merge(full, derived, sr, out_cap, backend=backend)
     if not sr.has_value:
         delta, ov2 = difference(derived, full, backend=backend)
         return new_full, delta, ov1 | ov2
     # lattice: look up each new_full row's key in old full, compare
     # values. Both arrays are sorted arrangements, so the lookup is a
-    # probe (lo rank only) and dispatches like the join's locate phase.
+    # probe (lo rank only) and dispatches like the join's locate phase —
+    # the key is ALL stored columns, so wide IDBs take the multi-word
+    # probe while <= 3-column IDBs stay on the single-word fast path.
     bk = backend or JNP
     cols = tuple(range(full.arity))
-    fk = pack_columns(full.data, cols, live_mask(full))
-    nk = pack_columns(new_full.data, cols, live_mask(new_full))
-    lo = bk.probe_lo(fk, nk)
-    found = (jnp.take(fk, lo, mode="clip") == nk) & (nk != KEY_PAD)
+    fk = pack_key_words(full.data, cols, live_mask(full))
+    nk = pack_key_words(new_full.data, cols, live_mask(new_full))
+    lo = _probe_lo_ranks(bk, fk, nk)
+    if fk.shape[1] == 1:
+        found = (jnp.take(fk[:, 0], lo, mode="clip") == nk[:, 0]) & (
+            nk[:, 0] != KEY_PAD)
+    else:
+        found = jnp.all(
+            jnp.take(fk, lo, axis=0, mode="clip") == nk, axis=1) & (
+            live_mask(new_full))
     old_val = jnp.where(found, jnp.take(full.val, lo, mode="clip"),
                         sr.identity)
     improved = jnp.where(
@@ -300,9 +338,10 @@ def reduce_groups(rel: Relation, group_cols: tuple[int, ...],
     bk = backend or JNP
     r = arrange(rel, group_cols)
     live = live_mask(r)
-    gkey = pack_columns(r.data, group_cols, live)
+    gkey = pack_key_words(r.data, group_cols, live)
     first = jnp.concatenate(
-        [live[:1], (gkey[1:] != gkey[:-1]) & live[1:]])
+        [live[:1],
+         jnp.any(gkey[1:] != gkey[:-1], axis=1) & live[1:]])
     seg = jnp.cumsum(first.astype(jnp.int32)) - 1
     seg = jnp.where(live, seg, r.capacity)
     outs = []
@@ -337,8 +376,8 @@ def reduce_groups(rel: Relation, group_cols: tuple[int, ...],
     overflow = ngroups > out_cap
     n = jnp.minimum(ngroups, out_cap)
     # rows already emitted in group-key order; re-sort to full-row order
-    return dedupe(out, None, PRESENCE, out_cap, assume_sorted=False)[0], (
-        overflow)
+    return dedupe(out, None, PRESENCE, out_cap, assume_sorted=False,
+                  backend=backend)[0], overflow
 
 
 def as_columns(rel: Relation) -> jax.Array:

@@ -20,6 +20,10 @@ Materialized relations live on their **home** shard — the hash of the
 value-combining ops of the fixpoint (``merge``, ``merge_with_delta``'s
 set difference / lattice lookup, ``dedupe`` of concatenations) are
 purely shard-local: no communication in the frontier step itself.
+``_row_hash`` folds over any number of columns, so wide (>= 4-column)
+relations home and repartition exactly like narrow ones — the
+shard-local relops then key them with multi-word lexicographic keys
+(relation.pack_key_words), and sharded × wide composes for free.
 
 **Repartitioning.** Binary ops keyed on a column subset (join,
 semijoin/antijoin, grouped reduce) first repartition their operands on
@@ -152,7 +156,8 @@ def shard_of(data: jax.Array, cols: tuple[int, ...], live: jax.Array,
 
 def repartition_rows(data: jax.Array, val: Optional[jax.Array],
                      live: jax.Array, key_cols: tuple[int, ...],
-                     sr: Semiring, out_cap: int, num_shards: int):
+                     sr: Semiring, out_cap: int, num_shards: int,
+                     backend=None):
     """All-to-all hash repartition on ``key_cols`` (shard-local view;
     must run inside shard_map over the "shards" axis).
 
@@ -186,14 +191,16 @@ def repartition_rows(data: jax.Array, val: Optional[jax.Array],
         recvv = jax.lax.all_to_all(sendv, SHARD_AXIS, split_axis=0,
                                    concat_axis=0)
         vflat = recvv.reshape(num_shards * cap)
-    return R.dedupe(flat, vflat, sr, out_cap)
+    return R.dedupe(flat, vflat, sr, out_cap, backend=backend)
 
 
 def repartition(rel: Relation, key_cols: tuple[int, ...], sr: Semiring,
-                num_shards: int, out_cap: Optional[int] = None):
+                num_shards: int, out_cap: Optional[int] = None,
+                backend=None):
     """Repartition a (shard-local view of a) Relation on ``key_cols``."""
     return repartition_rows(rel.data, rel.val, live_mask(rel), key_cols,
-                            sr, out_cap or rel.capacity, num_shards)
+                            sr, out_cap or rel.capacity, num_shards,
+                            backend=backend)
 
 
 # -- partitioned relop wrappers ----------------------------------------------
@@ -210,7 +217,7 @@ class ShardedEvaluator(Evaluator):
 
     def _repart(self, rel: Relation, key_cols: tuple[int, ...]):
         return repartition(rel, key_cols, self.cfg.semiring,
-                           self.num_shards)
+                           self.num_shards, backend=self.cfg.backend)
 
     def _join_op(self, left, right, l_keys, r_keys, l_out, r_out, out_cap):
         left, ov1 = self._repart(left, l_keys)
@@ -432,7 +439,8 @@ class ShardedEngine(Engine):
             for name in idbs:
                 full, delta = state[name]
                 merged, ov = R.merge(full, delta, self._sr_of(name),
-                                     self._idb_cap(name))
+                                     self._idb_cap(name),
+                                     backend=self.backend)
                 ovf |= ov
                 out[name] = merged
             return _restack(out), ovf[None]
@@ -458,4 +466,4 @@ class ShardedEngine(Engine):
         live = ~jnp.all(data == PAD, axis=1)
         return repartition_rows(
             data, val, live, tuple(range(data.shape[1])), sr, cap,
-            self.num_shards)
+            self.num_shards, backend=self.backend)

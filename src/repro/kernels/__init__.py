@@ -39,9 +39,16 @@ physical execution backend on TPU rather than standalone demos:
                        order-isomorphic int32 pair in-kernel; KEY_PAD
                        maps to the max pair, so dead rows sort last on
                        both sides.
+  merge_probe_multi  — the same probe for multi-word lexicographic keys
+                       (wide relations, >= 4 key columns;
+                       relation.pack_key_words): W int64 words become
+                       2W int32 chunks, compared by a static in-kernel
+                       fold. Narrow keys keep the single-word kernel.
   segment_reduce     — the sorted-segment aggregation behind
                        ``relops.reduce_groups`` (Datalog COUNT/SUM/
-                       MIN/MAX). Integer columns accumulate natively in
+                       MIN/MAX) and the duplicate-combine of
+                       ``relops.dedupe`` (valued semirings). Integer
+                       columns accumulate natively in
                        int32 — no float32 rounding; overflow past
                        2**31 - 1 wraps exactly like jax.ops.segment_sum
                        — with the same empty-segment identities, so jnp
@@ -49,14 +56,14 @@ physical execution backend on TPU rather than standalone demos:
                        relations (tests/test_backend_equivalence.py).
 
 Still jnp-only (future kernels plug into the same dispatch seam):
-``dedupe``'s duplicate-combine and the bounded expand inside ``join``.
+the bounded expand inside ``join`` and a fused dedupe-compare kernel.
 """
 from repro.kernels.ops import (
-    segment_reduce, merge_probe_counts, fm_interaction, flash_attention,
-    flash_decode,
+    segment_reduce, merge_probe_counts, merge_probe_multi,
+    fm_interaction, flash_attention, flash_decode,
 )
 
 __all__ = [
-    "segment_reduce", "merge_probe_counts", "fm_interaction",
-    "flash_attention", "flash_decode",
+    "segment_reduce", "merge_probe_counts", "merge_probe_multi",
+    "fm_interaction", "flash_attention", "flash_decode",
 ]

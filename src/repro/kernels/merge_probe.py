@@ -23,6 +23,15 @@ packs reach bit 62; KEY_PAD is 2**63 - 1) are split into an int32 pair
 (hi = bits 32..62; lo = bits 0..31 biased by -2**31 so signed order
 matches unsigned chunk order) and compared lexicographically in-kernel
 with plain signed compares.
+
+``merge_probe_multi_pallas`` generalizes the same kernel to the
+engine's multi-word lexicographic keys (relation.pack_key_words): a key
+of W int64 words becomes 2W int32 chunks, and the in-kernel compare
+folds over the chunk axis (a static Python loop, unrolled at trace
+time) — block skip logic and rank accumulation are unchanged. W = 1
+reduces to exactly the single-word kernel's compare, and the engine
+keeps routing narrow keys through ``merge_probe_pallas`` so the fast
+path is bit- and schedule-identical to before.
 """
 from __future__ import annotations
 
@@ -136,4 +145,123 @@ def merge_probe_pallas(
     # padded build rows carry MAXK; probes that are real never count them
     # as < or <= unless the probe itself is MAXK (a padded probe) —
     # those rows are sliced off here.
+    return lo[:n], hi[:n]
+
+
+# -- multi-word keys ---------------------------------------------------------
+
+def _chunk_lex_lt_le(a_chunks, b_chunks):
+    """Fold a lexicographic (lt, le) compare over a static sequence of
+    int32 chunk arrays (broadcastable shapes)."""
+    lt = None
+    eq = None
+    for a, b in zip(a_chunks, b_chunks):
+        if lt is None:
+            lt = a < b
+            eq = a == b
+        else:
+            lt = lt | (eq & (a < b))
+            eq = eq & (a == b)
+    return lt, lt | eq
+
+
+def _probe_multi_kernel(bmin_ref, bmax_ref, pc_ref, bc_ref,
+                        lo_ref, hi_ref, *, build_block: int,
+                        nchunks: int):
+    r = pl.program_id(1)
+
+    @pl.when(r == 0)
+    def _init():
+        lo_ref[...] = jnp.zeros_like(lo_ref)
+        hi_ref[...] = jnp.zeros_like(hi_ref)
+
+    pc = pc_ref[...]                            # [nchunks, probe_block]
+    pmin = [pc[c, 0] for c in range(nchunks)]   # probes sorted
+    pmax = [pc[c, -1] for c in range(nchunks)]
+    bmin = [bmin_ref[c, 0] for c in range(nchunks)]
+    bmax = [bmax_ref[c, 0] for c in range(nchunks)]
+
+    below_all, _ = _chunk_lex_lt_le(bmax, pmin)
+    above_all, _ = _chunk_lex_lt_le(pmax, bmin)
+
+    @pl.when(below_all)
+    def _full():
+        # entire build block strictly below every probe key
+        lo_ref[...] += build_block
+        hi_ref[...] += build_block
+
+    @pl.when(~below_all & ~above_all)
+    def _compare():
+        bc = bc_ref[...]                        # [nchunks, build_block]
+        lt, le = _chunk_lex_lt_le(
+            [bc[c][None, :] for c in range(nchunks)],
+            [pc[c][:, None] for c in range(nchunks)])
+        lo_ref[...] += lt.sum(axis=1).astype(jnp.int32)
+        hi_ref[...] += le.sum(axis=1).astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("probe_block", "build_block", "interpret"))
+def merge_probe_multi_pallas(
+    build_words: jax.Array,   # [m, W] int64, lexicographically ascending
+    probe_words: jax.Array,   # [n, W] int64, lexicographically ascending
+    probe_block: int = 512,
+    build_block: int = 1024,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """(lo, hi) int32 ranks per probe key vector — the multi-word
+    variant of ``merge_probe_pallas``; pad rows are KEY_PAD in every
+    word (relation.pack_key_words) and sort last."""
+    m, w = build_words.shape
+    n = probe_words.shape[0]
+    assert probe_words.shape[1] == w
+    MAXK = jnp.iinfo(jnp.int64).max
+    nchunks = 2 * w
+
+    def split(words):             # [k, W] int64 -> [2W, k] int32 chunks
+        words = words.astype(jnp.int64)
+        hi = (words >> 32).astype(jnp.int32)
+        lo = ((words & 0xFFFFFFFF) - (1 << 31)).astype(jnp.int32)
+        # chunk order word0_hi, word0_lo, word1_hi, ... keeps the
+        # chunk-wise lex order isomorphic to the word-wise lex order
+        return jnp.stack(
+            [hi[:, c // 2] if c % 2 == 0 else lo[:, c // 2]
+             for c in range(nchunks)], axis=0)
+
+    m_pad = pl.cdiv(max(m, 1), build_block) * build_block
+    n_pad = pl.cdiv(max(n, 1), probe_block) * probe_block
+    build_words = jnp.pad(build_words, ((0, m_pad - m), (0, 0)),
+                          constant_values=MAXK)
+    probe_words = jnp.pad(probe_words, ((0, n_pad - n), (0, 0)),
+                          constant_values=MAXK)
+    bc = split(build_words)                     # [2W, m_pad]
+    pc = split(probe_words)                     # [2W, n_pad]
+    nb = m_pad // build_block
+    bmin = bc.reshape(nchunks, nb, build_block)[:, :, 0]    # [2W, nb]
+    bmax = bc.reshape(nchunks, nb, build_block)[:, :, -1]
+
+    lo, hi = pl.pallas_call(
+        functools.partial(_probe_multi_kernel, build_block=build_block,
+                          nchunks=nchunks),
+        grid=(n_pad // probe_block, nb),
+        in_specs=[
+            pl.BlockSpec((nchunks, 1), lambda p, r: (0, r)),
+            pl.BlockSpec((nchunks, 1), lambda p, r: (0, r)),
+            pl.BlockSpec((nchunks, probe_block), lambda p, r: (0, p)),
+            pl.BlockSpec((nchunks, build_block), lambda p, r: (0, r)),
+        ],
+        out_specs=[
+            pl.BlockSpec((probe_block,), lambda p, r: (p,)),
+            pl.BlockSpec((probe_block,), lambda p, r: (p,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_pad,), jnp.int32),
+            jax.ShapeDtypeStruct((n_pad,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(bmin, bmax, pc, bc)
+    # padded build rows carry MAXK in every word; real probes never
+    # count them. Padded probes are sliced off here (their hi may count
+    # block padding — same dead-probe contract as the 1-D kernel).
     return lo[:n], hi[:n]

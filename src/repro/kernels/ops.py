@@ -18,7 +18,9 @@ from repro.kernels.fm_interaction import fm_interaction_pallas
 from repro.kernels.flash_attention import (
     flash_attention_pallas, flash_decode_pallas,
 )
-from repro.kernels.merge_probe import merge_probe_pallas
+from repro.kernels.merge_probe import (
+    merge_probe_multi_pallas, merge_probe_pallas,
+)
 from repro.kernels.segment_reduce import segment_reduce_pallas
 
 DEFAULT_BACKEND = "xla"
@@ -49,6 +51,16 @@ def merge_probe_counts(build_keys, probe_keys, backend=None, **kw):
         return ref.merge_probe_ref(build_keys, probe_keys)
     return merge_probe_pallas(
         build_keys, probe_keys, interpret=(backend == "interpret"), **kw)
+
+
+def merge_probe_multi(build_words, probe_words, backend=None, **kw):
+    """Multi-word variant of ``merge_probe_counts``: [m, W] / [n, W]
+    int64 lexicographic key vectors (relation.pack_key_words)."""
+    backend = _resolve(backend)
+    if backend == "xla":
+        return ref.merge_probe_multi_ref(build_words, probe_words)
+    return merge_probe_multi_pallas(
+        build_words, probe_words, interpret=(backend == "interpret"), **kw)
 
 
 def fm_interaction(x, v, backend=None, **kw):

@@ -30,6 +30,47 @@ def merge_probe_ref(build_keys: jax.Array, probe_keys: jax.Array):
     return lo.astype(jnp.int32), hi.astype(jnp.int32)
 
 
+def _lex_lt_le(rows: jax.Array, query: jax.Array):
+    """Word-wise lexicographic compare of key vectors [k, W] vs [k, W]:
+    (rows < query, rows <= query), both bool[k]."""
+    lt = jnp.zeros(rows.shape[:-1], bool)
+    eq = jnp.ones(rows.shape[:-1], bool)
+    for w in range(rows.shape[-1]):
+        a, b = rows[..., w], query[..., w]
+        lt = lt | (eq & (a < b))
+        eq = eq & (a == b)
+    return lt, lt | eq
+
+
+def merge_probe_multi_ref(build_words: jax.Array, probe_words: jax.Array):
+    """Multi-word searchsorted: build_words [m, W] sorted ascending under
+    word-wise lexicographic order; probe_words [n, W] (need not be
+    sorted). Returns (lo, hi) int32 ranks per probe key — the W = 1 case
+    agrees exactly with ``merge_probe_ref`` on the squeezed keys.
+
+    Implementation: one vectorized binary search over the sorted build
+    rows per side (ceil(log2(m + 1)) unrolled steps under jit; shapes
+    are static), each step gathering the midpoint key vector and
+    comparing word-wise."""
+    m = build_words.shape[0]
+    n = probe_words.shape[0]
+    steps = max(m, 1).bit_length() if m else 0
+
+    def search(upper: bool):
+        lo = jnp.zeros((n,), jnp.int32)
+        hi = jnp.full((n,), m, jnp.int32)
+        for _ in range(steps):
+            active = lo < hi
+            mid = (lo + hi) >> 1
+            rows = jnp.take(build_words, mid, axis=0, mode="clip")
+            lt, le = _lex_lt_le(rows, probe_words)
+            pred = le if upper else lt
+            lo = jnp.where(active & pred, mid + 1, lo)
+            hi = jnp.where(active & ~pred, mid, hi)
+        return lo
+    return search(False), search(True)
+
+
 def fm_interaction_ref(x: jax.Array, v: jax.Array) -> jax.Array:
     """FM 2-way term [Rendle ICDM'10]: x [b, f] feature values,
     v [f, k] factor embeddings. Returns [b]:

@@ -28,10 +28,13 @@ _datasets = equivalence_datasets
 
 
 @pytest.mark.parametrize("program", ["TC", "SG", "Reach", "Count",
-                                     "Sum", "Negation"])
+                                     "Sum", "Negation",
+                                     "WideReach", "WideReach2",
+                                     "WideJoin", "WideAgg"])
 def test_fixpoint_backend_equivalence(program):
     """jnp and Pallas backends: byte-identical relations, identical
-    iteration counts."""
+    iteration counts — narrow (single-word fast path) and wide
+    (multi-word key) programs alike."""
     src, edbs = _datasets()[program]
     out_j, st_j = Engine(compile_program(src),
                          _cfg("jnp")).run(dict(edbs))

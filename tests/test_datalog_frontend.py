@@ -94,34 +94,54 @@ def test_arity_mismatch_rejected():
         parse_program("p(x) :- e(x, y).\np(x, y) :- e(x, y).")
 
 
-def test_wide_idb_head_rejected_at_compile_time():
-    """IDB heads storing >= 4 columns exceed the engine's packed row key
-    (relation.pack_columns packs at most 3); the compiler must reject
-    them up front with an error naming the rule, not fail at runtime
-    deep in the semi-naive merge (ROADMAP 'Wide heads')."""
+def test_wide_head_capability_check():
+    """Stored IDB arity is gated by the engine's multi-word row key
+    capability (relation.MAX_STORED_COLUMNS), not the legacy 3-column
+    packed key: 4-8 column heads now compile and run; beyond the
+    ceiling the compiler still rejects up front with an error naming
+    the rule (ROADMAP 'Wide heads')."""
     from repro.core.optimizer import compile_program
     from repro.core.optimizer.pipeline import LoweringError
+    from repro.engine.relation import MAX_STORED_COLUMNS
 
-    with pytest.raises(LoweringError, match=r"'w'.*4 head columns"):
-        compile_program("""
-        .input e
-        .output w
-        w(a, b, c, d) :- e(a, b), e(b, c), e(c, d).
-        """)
-    # the error names the offending rule
-    try:
-        compile_program("w(a,b,c,d) :- e(a,b), e(b,c), e(c,d).")
-    except LoweringError as ex:
-        assert "w(a, b, c, d)" in str(ex)
-    else:
-        raise AssertionError("wide head not rejected")
+    assert MAX_STORED_COLUMNS == 8
 
-    # 3 stored columns stay supported...
-    compile_program("t(a, b, c) :- e(a, b), e(b, c).")
-    # ...and a monoid IDB stores its lattice value out-of-row, so a
-    # 4-column head with an aggregate is still 3 packed columns
+    # supported branch: wide heads up to the ceiling compile...
     compile_program("""
     .input e
+    .output w
+    w(a, b, c, d) :- e(a, b), e(b, c), e(c, d).
+    """)
+    vars8 = ", ".join("abcdefgh")
+    atoms = ", ".join(f"e({x}, {y})" for x, y in zip(
+        "abcdefg", "bcdefgh"))
+    compile_program(f"w({vars8}) :- {atoms}.")
+    # ...and actually run (not just compile): a 4-column fixpoint
+    import numpy as np
+    from repro.engine import Engine, EngineConfig
+    out, _ = Engine(
+        compile_program("w(a, b, c, d) :- e(a, b), e(b, c), e(c, d)."),
+        EngineConfig(kernel_backend="jnp")).run(
+        {"e": np.array([[1, 2], [2, 3], [3, 4]])})
+    np.testing.assert_array_equal(out["w"], [[1, 2, 3, 4]])
+
+    # rejected branch: beyond the ceiling, a friendly compile error
+    # naming the rule
+    vars9 = ", ".join("abcdefghi")
+    atoms9 = ", ".join(f"e({x}, {y})" for x, y in zip(
+        "abcdefgh", "bcdefghi"))
+    with pytest.raises(LoweringError,
+                       match=r"'w'.*9 head columns.*at most 8"):
+        compile_program(f"w({vars9}) :- {atoms9}.")
+    try:
+        compile_program(f"w({vars9}) :- {atoms9}.")
+    except LoweringError as ex:
+        assert ", ".join("abcdefghi") in str(ex)  # names the rule head
+
+    # a monoid IDB stores its lattice value out-of-row, so a 9-column
+    # head with an aggregate is still 8 stored columns — supported
+    compile_program(f"""
+    .input e
     .output m
-    m(a, b, c, MIN(d)) :- e(a, b, c, d), m(b, c, a, d).
+    m({vars8}, MIN(i)) :- e({vars8}, i), m({vars8}, i).
     """)

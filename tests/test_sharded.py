@@ -74,6 +74,18 @@ def test_sharded_fixpoint_equivalence(program, shards):
     assert eng.num_shards == shards
 
 
+@pytest.mark.parametrize("shards", SHARD_COUNTS)
+@pytest.mark.parametrize("program", ["WideReach", "WideReach2",
+                                     "WideJoin", "WideAgg"])
+def test_sharded_wide_fixpoint_equivalence(program, shards):
+    """Wide (4-6 stored column) programs: rows home by the any-arity
+    FNV row hash and probe with multi-word keys shard-locally — still
+    byte-identical to single-device at every shard count."""
+    _need(shards)
+    src, edbs = _datasets()[program]
+    _assert_equivalent(src, edbs, _cfg(shards=shards))
+
+
 @pytest.mark.parametrize("shards", (2, 8))
 def test_sharded_monoid_lattice(shards):
     """MIN-monoid fixpoint (CC): lattice values combine across shards
