@@ -8,7 +8,7 @@
 PYTEST = PYTHONPATH=src python -m pytest
 
 .PHONY: test test-fast test-sharded bench-backends bench-sharding \
-	bench-wide
+	bench-wide bench-arrange bench-smoke
 
 test:
 	$(PYTEST) -x -q
@@ -18,7 +18,8 @@ test-fast:
 
 test-sharded:
 	XLA_FLAGS="--xla_force_host_platform_device_count=8" \
-		$(PYTEST) -x -q tests/test_sharded.py tests/test_wide.py
+		$(PYTEST) -x -q tests/test_sharded.py tests/test_wide.py \
+		tests/test_arrange.py
 
 bench-backends:
 	PYTHONPATH=src python -m benchmarks.run --only backends
@@ -29,3 +30,12 @@ bench-sharding:
 
 bench-wide:
 	PYTHONPATH=src python -m benchmarks.run --only wide
+
+bench-arrange:
+	PYTHONPATH=src python -m benchmarks.run --only arrange
+
+# CI push-tier bitrot guard: the bench harness end-to-end on tiny
+# inputs, written to a scratch file so real results are not clobbered
+bench-smoke:
+	PYTHONPATH=src python -m benchmarks.run --smoke \
+		--out results/bench-smoke.json

@@ -13,11 +13,15 @@ from pathlib import Path
 
 ALL_TABLES = ("table1", "seminaive", "robustness", "specialization",
               "incremental", "kernels", "backends", "sharding", "wide",
-              "roofline")
+              "arrange", "roofline")
+
+# the cheap tables --smoke runs by default (CI bitrot guard: the bench
+# harness executes end-to-end on every push, in seconds)
+SMOKE_TABLES = ("arrange",)
 
 
-def collect(only=None) -> list[dict]:
-    only = set(only or ALL_TABLES)
+def collect(only=None, smoke: bool = False) -> list[dict]:
+    only = set(only or (SMOKE_TABLES if smoke else ALL_TABLES))
     rows: list[dict] = []
     if "table1" in only:
         from benchmarks.paper_programs import bench
@@ -47,6 +51,9 @@ def collect(only=None) -> list[dict]:
     if "wide" in only:
         from benchmarks.wide import bench as bench_wide
         rows += bench_wide()
+    if "arrange" in only:
+        from benchmarks.arrange import bench as bench_arrange
+        rows += bench_arrange(smoke=smoke)
     if "roofline" in only:
         from benchmarks.roofline import rows as roof_rows
         try:
@@ -60,11 +67,21 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help=f"comma list of {ALL_TABLES}")
-    ap.add_argument("--out", default="results/bench.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny datasets, single repeat, cheap tables "
+                         f"only (default {SMOKE_TABLES}) — the CI "
+                         "push-tier bitrot guard for the bench harness")
+    ap.add_argument("--out", default=None,
+                    help="output json (default results/bench.json; "
+                         "--smoke defaults to results/bench-smoke.json "
+                         "so tiny rows never clobber real results)")
     args = ap.parse_args()
     only = args.only.split(",") if args.only else None
+    if args.out is None:
+        args.out = ("results/bench-smoke.json" if args.smoke
+                    else "results/bench.json")
 
-    rows = collect(only)
+    rows = collect(only, smoke=args.smoke)
     print("name,us_per_call,derived")
     for r in rows:
         name = "/".join(str(r.get(k)) for k in

@@ -32,6 +32,21 @@ optimizer. Concretely, two primitives dominate the fixpoint hot path:
       duplicate-combine of ``relops.dedupe`` for valued semirings
       (COUNTING multiplicities, MIN/MAX lattice merge).
 
+  merge_ranks(a_keys, b_keys) -> (pos_a, pos_b)
+      Output positions of a stable two-pointer merge of two sorted key
+      sequences (a wins ties) — incremental arrangement maintenance:
+      ``relops.merge_sorted`` scatters the already-sorted ``full`` and
+      the small sorted ``delta`` by rank instead of concat + full
+      re-sort, turning the hottest per-iteration cost from O(n log n)
+      into O(n + |delta|). ``merge_ranks_multi`` is the word-vector
+      variant. jnp = two searchsorted passes; Pallas = the merge-path
+      probe kernel run once per rank side.
+
+  expand(offsets, out_cap) -> (row_idx, within_idx, valid, total)
+      The join's bounded expand (repeat-by-counts). jnp reference on
+      every backend today; a Pallas expand kernel plugs in behind the
+      same entry point later.
+
 A ``KernelDispatch`` bundles one implementation of each. Two are
 provided:
 
@@ -67,10 +82,10 @@ in tests/test_backend_equivalence.py pin down):
     identities as ``jax.ops.segment_min/max``, so both backends emit
     byte-identical relations.
 
-Ops NOT yet dispatched (still pure jnp, candidates for future kernels):
-the bounded expand of ``join`` and a fused dedupe-compare kernel.
-``dedupe``'s duplicate-combine now routes through ``segment_reduce``.
-See ROADMAP "Open items".
+Every hot physical op of the fixpoint now routes through this seam
+(probe, segment reduce, merge ranks, expand); the remaining candidate
+for a dedicated kernel body is a fused dedupe-compare and the Pallas
+implementation of ``expand``. See ROADMAP "Open items".
 """
 from __future__ import annotations
 
@@ -122,6 +137,39 @@ class KernelDispatch:
         ids dropped) with op in {"sum", "min", "max"}."""
         raise NotImplementedError
 
+    def merge_ranks(self, a_keys: jax.Array, b_keys: jax.Array):
+        """(pos_a, pos_b) int32 output positions of the stable merge of
+        two sorted int64 key sequences (a wins ties):
+        pos_a[i] = i + #{b < a[i]}, pos_b[j] = j + #{a <= b[j]}.
+        Both sides sorted, so the default derivation runs ``probe``
+        once per side; backends with a fused merge-path kernel
+        override. For KEY_PAD rows of b, pos_b may overshoot (the
+        probe's dead-probe hi contract) — consumers scatter with drop
+        mode, which is byte-identical for dead rows."""
+        m = a_keys.shape[0]
+        n = b_keys.shape[0]
+        lo_a = self.probe_lo(b_keys, a_keys)
+        _, hi_b = self.probe(a_keys, b_keys)
+        return (jnp.arange(m, dtype=jnp.int32) + lo_a,
+                jnp.arange(n, dtype=jnp.int32) + hi_b)
+
+    def merge_ranks_multi(self, a_words: jax.Array, b_words: jax.Array):
+        """Multi-word ``merge_ranks``: [m, W] / [n, W] int64 key-word
+        vectors under word-wise lexicographic order."""
+        m = a_words.shape[0]
+        n = b_words.shape[0]
+        lo_a = self.probe_lo_multi(b_words, a_words)
+        _, hi_b = self.probe_multi(a_words, b_words)
+        return (jnp.arange(m, dtype=jnp.int32) + lo_a,
+                jnp.arange(n, dtype=jnp.int32) + hi_b)
+
+    def expand(self, offsets: jax.Array, out_cap: int):
+        """The join's bounded expand: output slot j -> (input row,
+        within-group index, valid, total). Routed through the seam so a
+        Pallas expand kernel can replace the jnp reference without
+        touching relops."""
+        return ops.expand_indices(offsets, out_cap, backend="xla")
+
     def __repr__(self):
         return f"<KernelDispatch {self.name}>"
 
@@ -146,6 +194,12 @@ class JnpDispatch(KernelDispatch):
         return ops.merge_probe_multi(build_words, probe_words,
                                      backend="xla")
 
+    def merge_ranks(self, a_keys, b_keys):
+        return ops.merge_ranks(a_keys, b_keys, backend="xla")
+
+    def merge_ranks_multi(self, a_words, b_words):
+        return ops.merge_ranks_multi(a_words, b_words, backend="xla")
+
     def segment_reduce(self, values, seg_ids, num_segments, op):
         return ops.segment_reduce(values, seg_ids, num_segments, op,
                                   backend="xla")
@@ -168,6 +222,15 @@ class PallasDispatch(KernelDispatch):
 
     def probe_multi(self, build_words, probe_words):
         return ops.merge_probe_multi(build_words, probe_words,
+                                     backend=self._mode)
+
+    def merge_ranks(self, a_keys, b_keys):
+        # both rank passes through the blocked merge-path kernel (both
+        # sequences are sorted arrangements — the kernel's contract)
+        return ops.merge_ranks(a_keys, b_keys, backend=self._mode)
+
+    def merge_ranks_multi(self, a_words, b_words):
+        return ops.merge_ranks_multi(a_words, b_words,
                                      backend=self._mode)
 
     def segment_reduce(self, values, seg_ids, num_segments, op):

@@ -32,7 +32,7 @@ from repro.engine import relops as R
 from repro.engine.backend import KernelDispatch, resolve_backend
 from repro.engine.lower import Env, Evaluator, LowerConfig
 from repro.engine.relation import (
-    PAD, Relation, empty, from_numpy, live_mask, to_numpy,
+    PAD, Relation, UNSORTED, empty, from_numpy, live_mask, to_numpy,
     to_numpy_with_val,
 )
 from repro.engine.semiring import (
@@ -56,6 +56,13 @@ class EngineConfig:
     # a KernelDispatch instance is also accepted. Resolved once at
     # engine construction.
     kernel_backend: str = "auto"
+    # arrangement layer (relation.py docstring): share arrangements
+    # across rules/subplans per iteration (relops.ArrangementCache),
+    # skip no-op arranges via the sort-order witness, and maintain
+    # full arrangements incrementally (relops.merge_sorted) instead of
+    # concat + re-sort. False restores the seed sort-per-op engine —
+    # byte-identical fixpoints either way (tests/test_arrange.py).
+    arrangements: bool = True
     # sharded execution (engine/shard.py): number of hash partitions /
     # devices on the 1-D fixpoint mesh. 0 or 1 = single-device Engine;
     # >= 2 selects ShardedEngine via ``repro.engine.make_engine``.
@@ -124,7 +131,11 @@ class Engine:
         data_cols = [c for c in range(rel.arity) if c != vpos]
         data = rel.data[:, jnp.array(data_cols)]
         val = jnp.where(live_mask(rel), rel.data[:, vpos], sr.identity)
-        return Relation(data, val.astype(jnp.int32), rel.n)
+        # a column-subset view loses the sort guarantee: rows sorted by
+        # all columns need not stay sorted with vpos removed — mark it
+        # so no arrangement fast path can trust this relation
+        return Relation(data, val.astype(jnp.int32), rel.n,
+                        order=UNSORTED)
 
     # -- plan evaluation ------------------------------------------------------
     def _merge_head(self, rels: list, sr: Semiring, cap: int):
@@ -190,6 +201,7 @@ class Engine:
     def _stratum_init(self, rels, init_rels, nonrec, idbs, ev,
                       monoid_names):
         """Facts + nonrecursive rules once -> initial (full, delta)."""
+        cache = ev.begin_pass()
         env = Env(dict(rels), self.compiled.shared, monoid_names)
         derived = self._eval_plans(nonrec, env, ev)
         state = {}
@@ -199,7 +211,8 @@ class Engine:
                 sr = self._sr_of(name)
                 full0, delta0, ov = R.merge_with_delta(
                     full0, derived[name], sr, self._idb_cap(name),
-                    backend=self.backend)
+                    backend=self.backend, cache=cache,
+                    incremental=self.cfg.arrangements)
                 env.overflow = env.overflow | ov
             else:
                 delta0 = full0
@@ -207,14 +220,25 @@ class Engine:
         return state, env.overflow
 
     def _stratum_iter(self, state, base, rec, idbs, ev, monoid_names):
-        """One semi-naive iteration -> (new_state, overflow)."""
+        """One semi-naive iteration -> (new_state, overflow).
+
+        Arrangement lifecycle: one ``ArrangementCache`` spans the whole
+        iteration (the merge of full+delta, every rule/subplan arrange,
+        and the frontier difference), created here in host mode's
+        per-iteration step and inside the while_loop body in device
+        mode — under jit either way this is one cache per compiled
+        step, so each distinct (relation, key) sorts at most once per
+        iteration."""
+        cache = ev.begin_pass()
+        inc = self.cfg.arrangements
         env_rels = dict(base)
         ovf = jnp.zeros((), bool)
         for name in idbs:
             full, delta = state[name]
             sr = self._sr_of(name)
             full_new, ov = R.merge(full, delta, sr, self._idb_cap(name),
-                                   backend=self.backend)
+                                   backend=self.backend,
+                                   incremental=inc)
             ovf |= ov
             env_rels[(name, I.FULL)] = full
             env_rels[(name, I.FULL_OLD)] = full
@@ -229,7 +253,8 @@ class Engine:
             if name in derived:
                 nf, nd, ov = R.merge_with_delta(
                     full_new, derived[name], sr, self._idb_cap(name),
-                    backend=self.backend)
+                    backend=self.backend, cache=cache,
+                    incremental=inc)
                 ovf |= ov
             else:
                 nf = full_new
@@ -243,7 +268,7 @@ class Engine:
         base_env_rels = env_rels
         cfg = self.cfg
         lcfg = LowerConfig(cfg.intermediate_cap, cfg.semiring,
-                           self.backend)
+                           self.backend, cfg.arrangements)
         ev = Evaluator(lcfg)
         monoid_names = set(self.monoid)
 
@@ -261,8 +286,12 @@ class Engine:
                 rels, init_rels, nonrec, idbs, ev, monoid_names)
 
         if init_state is not None:
-            # incremental continuation: merge seed deltas into given fulls
+            # incremental continuation: merge seed deltas into given
+            # fulls — the stored fulls are still sorted arrangements,
+            # so the seed merge reuses them incrementally (no re-sort
+            # of the materialized state on resume)
             def seed_fn(given):
+                cache = ev.begin_pass()
                 state = {}
                 ovf = jnp.zeros((), bool)
                 for name in idbs:
@@ -273,7 +302,8 @@ class Engine:
                     else:
                         nf, nd, ov = R.merge_with_delta(
                             full, seed, sr, self._idb_cap(name),
-                            backend=self.backend)
+                            backend=self.backend, cache=cache,
+                            incremental=cfg.arrangements)
                         ovf |= ov
                         state[name] = (nf, nd)
                 return state, ovf
@@ -344,7 +374,8 @@ class Engine:
             full, delta = state[name]
             sr = self._sr_of(name)
             merged, ov = R.merge(full, delta, sr, self._idb_cap(name),
-                                 backend=self.backend)
+                                 backend=self.backend,
+                                 incremental=cfg.arrangements)
             if bool(ov):
                 raise OverflowError_(f"overflow finalizing {name}")
             full_env[(name, I.FULL)] = merged

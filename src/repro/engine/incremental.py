@@ -25,6 +25,14 @@ stored column, which the relops resolve with multi-word lexicographic
 keys (relation.pack_key_words) — seeded continuations never see the
 arity (tests/test_wide.py pins insert and delete against batch
 recompute).
+
+The maintained state IS an arrangement (relation.py docstring): the
+stored fulls stay sorted across updates, so a seeded continuation
+reuses the final arrangement of the previous run directly — the seed
+merge is the incremental ``relops.merge_sorted`` path (O(n + |seed|),
+no re-sort of the materialized view), and each seed pass opens one
+``ArrangementCache`` so every retagged rule occurrence shares the
+stored relations' per-key arrangements.
 """
 from __future__ import annotations
 
@@ -273,8 +281,14 @@ class IncrementalEngine:
         and their deltas folded into CHANGED entries."""
         lcfg = LowerConfig(self.engine.cfg.intermediate_cap,
                            self.engine.cfg.semiring,
-                           self.engine.backend)
+                           self.engine.backend,
+                           self.engine.cfg.arrangements)
         ev = Evaluator(lcfg)
+        # one arrangement scope for the whole seed pass: the stored
+        # fulls are scanned by every retagged rule occurrence, so their
+        # per-key arrangements are built once and shared across all of
+        # them (the Sec. 7 reuse, applied to maintenance)
+        ev.begin_pass()
         rels = dict(env_rels)
         for name, rel in changed_rows.items():
             rels[(name, CHANGED)] = rel
@@ -357,8 +371,10 @@ class IncrementalEngine:
         rederive: dict[str, Relation] = {}
         lcfg = LowerConfig(self.engine.cfg.intermediate_cap,
                            self.engine.cfg.semiring,
-                           self.engine.backend)
+                           self.engine.backend,
+                           self.engine.cfg.arrangements)
         ev = Evaluator(lcfg)
+        ev.begin_pass()
         env = Env(dict(self._env), self.compiled.shared,
                   set(self.engine.monoid))
         for p in _unique_rules(sp.plans):

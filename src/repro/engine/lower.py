@@ -2,7 +2,12 @@
 
 ``eval_ir`` walks an optimized IR and emits shape-static JAX ops over
 ``Relation`` structs. SharedRefs are memoized per evaluation pass — the
-executor-level realization of shared arrangements / CTE reuse (Sec. 7).
+executor-level realization of shared subplans / CTE reuse (Sec. 7) —
+and below them the per-pass ``relops.ArrangementCache``
+(``Evaluator.begin_pass``) shares the *physical sorts*: every
+join/membership/reduce of the pass resolves its operand arrangements
+through one cache keyed on (relation identity, key columns), so two
+rules probing the same relation on the same key emit one sort.
 
 Scans resolve through an environment mapping (relation, version) to the
 current Relation; monoid IDBs (Sec. 9) expose their lattice value as a
@@ -30,6 +35,11 @@ class LowerConfig:
     semiring: Semiring = PRESENCE
     # kernel dispatch for probe/reduce hot ops (backend.py); None = jnp
     backend: Optional[KernelDispatch] = None
+    # arrangement layer (relops.ArrangementCache + witness fast path):
+    # share one sort per (relation, key) across all rules/subplans of
+    # an evaluation pass. False = the pre-arrangement sort-per-op
+    # behavior (the equivalence baseline).
+    arrangements: bool = True
 
 
 class Env:
@@ -117,6 +127,18 @@ class Evaluator:
 
     def __init__(self, cfg: LowerConfig):
         self.cfg = cfg
+        # arrangement-sharing scope; engine calls begin_pass() once per
+        # evaluation pass (iteration / seed pass)
+        self.cache: Optional[R.ArrangementCache] = None
+
+    def begin_pass(self) -> Optional[R.ArrangementCache]:
+        """Open a fresh arrangement-sharing scope. One cache per
+        evaluation pass: all rules/subplans rendered until the next
+        begin_pass share arrangements (and, sharded, repartitions)
+        keyed on operand identity. Returns the cache (None when the
+        arrangement layer is disabled)."""
+        self.cache = R.ArrangementCache() if self.cfg.arrangements else None
+        return self.cache
 
     # -- physical-op hooks ---------------------------------------------------
     def _dedupe_op(self, data, val, out_cap):
@@ -126,15 +148,17 @@ class Evaluator:
     def _join_op(self, left, right, l_keys, r_keys, l_out, r_out, out_cap):
         return R.join(left, right, l_keys, r_keys, l_out, r_out,
                       self.cfg.semiring, out_cap,
-                      backend=self.cfg.backend)
+                      backend=self.cfg.backend, cache=self.cache)
 
     def _semijoin_op(self, left, right, l_keys, r_keys):
         return R.semijoin(left, right, l_keys, r_keys, left.capacity,
-                          self.cfg.semiring, backend=self.cfg.backend)
+                          self.cfg.semiring, backend=self.cfg.backend,
+                          cache=self.cache)
 
     def _antijoin_op(self, left, right, l_keys, r_keys):
         return R.antijoin(left, right, l_keys, r_keys, left.capacity,
-                          self.cfg.semiring, backend=self.cfg.backend)
+                          self.cfg.semiring, backend=self.cfg.backend,
+                          cache=self.cache)
 
     def _concat_op(self, rels, out_cap):
         return R.concat_all(rels, self.cfg.semiring, out_cap,
@@ -142,7 +166,8 @@ class Evaluator:
 
     def _reduce_op(self, child, group_cols, agg_specs, out_cap):
         return R.reduce_groups(child, group_cols, agg_specs, out_cap,
-                               backend=self.cfg.backend)
+                               backend=self.cfg.backend,
+                               cache=self.cache)
 
     # -- public -------------------------------------------------------------
     def eval(self, node: I.IR, env: Env) -> Relation:

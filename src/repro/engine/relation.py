@@ -1,21 +1,55 @@
-"""Fixed-capacity relations — the TPU stand-in for DD collections.
+"""Fixed-capacity relations — the TPU stand-in for DD collections —
+and the **arrangement contract** every engine layer builds on.
 
-A ``Relation`` is a struct-of-arrays pytree:
+A ``Relation`` is a pytree with three array children and one static
+piece of metadata:
 
-    data : int32[capacity, arity]   tuple columns
-    val  : int32[capacity] | None   diff/monoid payload (None = presence,
-                                    the zero-bit struct of Sec. 8)
-    n    : int32[]                  live row count
+    data  : int32[capacity, arity]   tuple columns
+    val   : int32[capacity] | None   diff/monoid payload (None = presence,
+                                     the zero-bit struct of Sec. 8)
+    n     : int32[]                  live row count
+    order : tuple[int, ...] | None   sort-order witness (static aux data,
+                                     never traced; None = identity)
 
-Invariants maintained by every relop:
-  * rows [0, n) are live, rows [n, cap) are PAD (all-PAD columns,
-    identity payload);
-  * live rows are sorted lexicographically by their columns and
-    duplicate-free (an "arrangement" in DD terms — the sorted array IS
-    the index).
+Arrangement contract
+====================
 
-Multi-word arrangement contract
-===============================
+In Differential Dataflow terms a sorted ``Relation`` *is* an
+arrangement: the sorted array is the index, and every probe/merge
+consumer relies on three invariants that every relop maintains:
+
+  * **Sorted + distinct.** Rows ``[0, n)`` are live, sorted
+    lexicographically by the witness column sequence, and
+    duplicate-free; rows ``[n, cap)`` are PAD (all-PAD columns,
+    identity payload), which sort last (PAD is the int32 maximum in
+    every data column).
+  * **Sort-order witness.** ``order`` records the exact column sequence
+    the rows are sorted by — ``None`` means the identity sequence
+    ``(0, 1, ..., arity-1)``, the state every materialized relation
+    (dedupe/merge output, ground facts) is in. ``relops.arrange``
+    consults the witness and **skips the sort entirely** when the
+    requested key columns are already a prefix of it (a no-op arrange
+    used to pay a full ``lex_order`` every call). The witness is
+    *static* pytree aux data: two relations with different witnesses
+    have different treedefs, so a stale witness cannot silently flow
+    through a jitted fixpoint step.
+  * **Maintenance is incremental.** The per-iteration frontier step
+    never re-sorts the world: ``relops.merge`` interleaves the
+    already-sorted ``full`` with the small sorted ``delta`` by rank
+    (``merge_sorted`` — a two-pointer merge through the kernel-dispatch
+    seam), so maintaining the full arrangement costs O(n + |delta|)
+    instead of the O(n log n) concat-and-re-sort it replaced. The
+    result is byte-identical to the sort path.
+
+Arrangement *reuse* across rules/subplans inside one evaluation pass is
+handled by ``relops.ArrangementCache``: entries are keyed by
+``(id(rel.data), key_cols)`` with the keyed array held strongly (so
+CPython cannot recycle the id while the entry is alive), and one cache
+lives exactly as long as one evaluation pass — the executor realization
+of the Sec. 7 plan-level sharing the optimizer already annotates.
+
+Multi-word row keys
+===================
 
 Row/join keys are **multi-word lexicographic keys**: ``pack_key_words``
 maps ``k`` selected columns to a ``(ceil(k/3),)``-vector of int64 words
@@ -30,8 +64,7 @@ probe/merge consumer relies on:
     automatically sorted by its key words, for any arity.
   * **PAD sentinel per word.** Dead rows map to ``KEY_PAD`` in *every*
     word, so they sort last under the word-wise order exactly as they
-    do under the column order (PAD is the int32 maximum in every data
-    column).
+    do under the column order.
   * **Single-word fast path.** For keys of <= 3 columns, ``key_width``
     is 1 and word 0 is bit-for-bit the legacy ``pack_columns`` key —
     consumers squeeze to the 1-D probe seam, so narrow programs execute
@@ -57,7 +90,7 @@ guarantees here.
 from __future__ import annotations
 
 import contextlib
-from typing import NamedTuple, Optional
+from typing import Optional
 
 import jax
 
@@ -84,12 +117,59 @@ MAX_STORED_COLUMNS = 8
 # to measure the word-loop overhead (benchmarks/wide.py).
 _FORCE_MULTIWORD = False
 
+# Trace-time instrumentation for the arrangement layer (benchmarks/
+# arrange.py): how many sort launches / rank-merges / cache outcomes a
+# compiled step contains. Under jit these count ops *emitted into the
+# graph* (they advance while tracing, once per compilation), which is
+# exactly the per-iteration launch count the bench reports.
+COUNTERS = {
+    "sorts": 0,           # lex_order launches (full row sorts)
+    "merge_sorted": 0,    # incremental rank-merge maintenance steps
+    "cache_hits": 0,      # ArrangementCache reuse across rules/subplans
+    "cache_misses": 0,
+    "cache_fastpath": 0,  # witness says already arranged: no sort at all
+}
 
-class Relation(NamedTuple):
-    data: jax.Array            # int32[cap, arity]
-    val: Optional[jax.Array]   # int32[cap] or None
-    n: jax.Array               # int32 scalar
 
+# Sort-order witness sentinel: rows in no guaranteed order (e.g. a
+# column-subset view like the engine's monoid split). Such relations
+# never take the arrange fast path or the merge_sorted maintenance
+# path; the witness-blind ops (dedupe, concat, repartition) re-sort.
+UNSORTED = ("unsorted",)
+
+
+def reset_counters() -> None:
+    for k in COUNTERS:
+        COUNTERS[k] = 0
+
+
+def counters_snapshot() -> dict:
+    return dict(COUNTERS)
+
+
+@jax.tree_util.register_pytree_node_class
+class Relation:
+    """See module docstring. ``order`` is the static sort-order witness;
+    construction sites that produce identity-sorted rows just omit it."""
+
+    __slots__ = ("data", "val", "n", "order")
+
+    def __init__(self, data, val, n, order: Optional[tuple] = None):
+        self.data = data
+        self.val = val
+        self.n = n
+        self.order = tuple(order) if order is not None else None
+
+    # -- pytree (order is aux data: static, part of the treedef) ------------
+    def tree_flatten(self):
+        return (self.data, self.val, self.n), self.order
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        data, val, n = children
+        return cls(data, val, n, order=aux)
+
+    # -- metadata -----------------------------------------------------------
     @property
     def capacity(self) -> int:
         return self.data.shape[0]
@@ -97,6 +177,33 @@ class Relation(NamedTuple):
     @property
     def arity(self) -> int:
         return self.data.shape[1]
+
+    def sort_prefix(self) -> tuple:
+        """The full column sequence live rows are sorted by (UNSORTED
+        when no order is guaranteed)."""
+        if self.order is not None:
+            return self.order
+        return tuple(range(self.arity))
+
+    def arranged_by(self, key_cols) -> bool:
+        """True iff rows are already sorted primarily by exactly this
+        key-column sequence — the witness fast-path test of
+        ``relops.arrange``."""
+        if self.order == UNSORTED:
+            return False
+        key_cols = tuple(key_cols)
+        return self.sort_prefix()[:len(key_cols)] == key_cols
+
+    @property
+    def identity_sorted(self) -> bool:
+        """True iff the witness is the identity sequence — the state
+        ``merge_sorted`` maintenance requires of both operands."""
+        return self.order is None or self.order == tuple(
+            range(self.arity))
+
+    def __repr__(self):
+        return (f"Relation(cap={self.capacity}, arity={self.arity}, "
+                f"order={self.order})")
 
 
 def empty(cap: int, arity: int, val_identity=None) -> Relation:
@@ -217,6 +324,7 @@ def live_mask(rel: Relation) -> jax.Array:
 def lex_order(data: jax.Array) -> jax.Array:
     """Row ordering permutation: lexicographic by column 0, 1, ...; PAD
     rows sort last (PAD is the int32 maximum in every column)."""
+    COUNTERS["sorts"] += 1
     arity = data.shape[1]
     return jnp.lexsort(tuple(data[:, c] for c in range(arity - 1, -1, -1)))
 

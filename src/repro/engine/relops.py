@@ -6,13 +6,22 @@ bounded data-dependent output may have been truncated. Ops are pure and
 shape-static, so the whole iteration body fuses under jit, and the same
 code lowers under pjit/shard_map for scale-out (DESIGN.md §7).
 
-Hot physical primitives (the join's count/locate probe, the
-merge_with_delta lattice lookup, the membership probe behind
-semijoin/antijoin/difference, grouped segment aggregation, and
-``dedupe``'s duplicate-combine) are not hard-coded: ops take an
-injected ``KernelDispatch`` (engine/backend.py) that routes them to
-the Pallas TPU kernels or the pure-jnp fallback. ``backend=None``
-means jnp.
+Hot physical primitives (the join's count/locate probe and bounded
+expand, the merge_with_delta lattice lookup, the membership probe
+behind semijoin/antijoin/difference, grouped segment aggregation,
+``dedupe``'s duplicate-combine, and the incremental merge ranks) are
+not hard-coded: ops take an injected ``KernelDispatch``
+(engine/backend.py) that routes them to the Pallas TPU kernels or the
+pure-jnp fallback. ``backend=None`` means jnp.
+
+Arrangement layer (relation.py docstring): ``arrange`` consults the
+relation's sort-order witness and skips no-op sorts; ops additionally
+take an optional ``ArrangementCache`` so all rules/subplans of one
+evaluation pass share one sort per (relation, key); and ``merge`` /
+``merge_with_delta`` maintain the sorted ``full`` incrementally
+(``merge_sorted``: a two-pointer rank merge with the small sorted
+delta) instead of concat + full re-sort — O(n + |delta|) per
+iteration, byte-identical results.
 
 Row keys are multi-word lexicographic (relation.pack_key_words): keys
 of <= 3 columns stay on the legacy single-word probe seam bit-for-bit
@@ -39,8 +48,8 @@ import jax.numpy as jnp
 
 from repro.engine.backend import JNP, KernelDispatch
 from repro.engine.relation import (
-    KEY_PAD, PAD, Relation, lex_order, lex_order_words, live_mask,
-    pack_key_words, rows_equal_prev,
+    COUNTERS, KEY_PAD, PAD, Relation, lex_order, lex_order_words,
+    live_mask, pack_key_words, rows_equal_prev,
 )
 from repro.engine.semiring import Semiring, PRESENCE
 
@@ -124,14 +133,104 @@ def dedupe(data: jax.Array, val: Optional[jax.Array], sr: Semiring,
 
 def arrange(rel: Relation, key_cols: tuple[int, ...]) -> Relation:
     """Sort a relation so ``key_cols`` form the primary sort order (the
-    DD 'arrangement'). Remaining columns keep relative order (stable)."""
-    perm = list(key_cols) + [c for c in range(rel.arity)
-                             if c not in key_cols]
+    DD 'arrangement'). Fast path: when ``key_cols`` is already a prefix
+    of the relation's sort-order witness the relation IS the requested
+    arrangement and no sort (or column-permutation round-trip) runs at
+    all — a no-op arrange used to pay a full ``lex_order`` every call.
+
+    Guarantee: rows come back sorted primarily by the ``key_cols``
+    sequence; the exact tie-breaking order among the remaining columns
+    is whatever the output's witness records — ascending column order
+    when a fresh sort runs, the pre-existing witness tail when the
+    fast path applies (e.g. ``arrange(arrange(r, (2, 1)), (2,))``
+    keeps (2, 1, 0) order rather than re-sorting to (2, 0, 1)). Every
+    key-prefix consumer (join probe, membership, segment boundaries)
+    is tie-order-insensitive, and materialization always goes through
+    a witness-blind ``dedupe`` — do not rely on a specific tie order
+    across the fast path."""
+    key_cols = tuple(key_cols)
+    if rel.arranged_by(key_cols):
+        COUNTERS["cache_fastpath"] += 1
+        return rel
+    perm = tuple(key_cols) + tuple(c for c in range(rel.arity)
+                                   if c not in key_cols)
     reordered = rel.data[:, jnp.array(perm)]
     order = lex_order(reordered)
     data = rel.data[order]
     val = rel.val[order] if rel.val is not None else None
-    return Relation(data, val, rel.n)
+    return Relation(data, val, rel.n, order=perm)
+
+
+class ArrangementCache:
+    """Shares arrangements across all rules/subplans of one evaluation
+    pass — the executor realization of the Sec. 7 plan-level sharing
+    the optimizer annotates (`SharedRef`s memoize whole subplans; this
+    memoizes the physical sort under every join/membership/reduce).
+
+    Keying: ``(id(rel.data), key_cols)``, verified on lookup by ``is``
+    against ALL three stored leaves (data, val, n) — the leaves are
+    held strongly so a recycled CPython id can never alias a dead
+    relation, and a relation sharing a data array but carrying a
+    different live count or payload (e.g. the sharded zero-key guard's
+    psum-recounted view) never aliases a cached entry either. Lifetime
+    is one evaluation pass (one iteration body / one seed pass): the
+    engine constructs a fresh cache per pass, which under jit means
+    per *trace* — a hit removes the duplicate sort from the compiled
+    step entirely.
+
+    Entries are plain Relations, so a cached arrangement's witness
+    makes a later compatible request (e.g. key (2, 0) after (2,))
+    resolve via the no-sort fast path as well."""
+
+    def __init__(self):
+        self._entries: dict = {}
+        self.hits = 0
+        self.misses = 0
+
+    def arrange(self, rel: Relation, key_cols: tuple[int, ...]
+                ) -> Relation:
+        key_cols = tuple(key_cols)
+        if rel.arranged_by(key_cols):
+            COUNTERS["cache_fastpath"] += 1
+            return rel
+        key = (id(rel.data), key_cols)
+        ent = self._entries.get(key)
+        if ent is not None and ent[0] is rel.data and (
+                ent[1] is rel.val) and ent[2] is rel.n:
+            self.hits += 1
+            COUNTERS["cache_hits"] += 1
+            return ent[3]
+        self.misses += 1
+        COUNTERS["cache_misses"] += 1
+        arranged = arrange(rel, key_cols)
+        self._entries[key] = (rel.data, rel.val, rel.n, arranged)
+        return arranged
+
+    def memo(self, tag, keyed_leaves: tuple, compute):
+        """Generic sharing for non-sort physical work keyed on a
+        relation's identity — e.g. a sharded repartition whose result
+        many ops of the same pass reuse (shard.ShardedEvaluator).
+        ``keyed_leaves`` is the tuple of objects the work depends on;
+        every leaf is held strongly and re-verified with ``is``."""
+        key = (tag,) + tuple(id(x) for x in keyed_leaves)
+        ent = self._entries.get(key)
+        if ent is not None and all(
+                a is b for a, b in zip(ent[0], keyed_leaves)):
+            self.hits += 1
+            COUNTERS["cache_hits"] += 1
+            return ent[1]
+        self.misses += 1
+        COUNTERS["cache_misses"] += 1
+        out = compute()
+        self._entries[key] = (keyed_leaves, out)
+        return out
+
+
+def _arrange(cache: "ArrangementCache | None", rel: Relation,
+             key_cols: tuple[int, ...]) -> Relation:
+    if cache is not None:
+        return cache.arrange(rel, key_cols)
+    return arrange(rel, key_cols)
 
 
 def _searchsorted(sorted_keys, query):
@@ -143,14 +242,12 @@ def _searchsorted(sorted_keys, query):
 def expand_indices(counts: jax.Array, offsets: jax.Array, out_cap: int):
     """The bounded 'repeat' pattern: output slot j maps to input row
     i = searchsorted(offsets, j, 'right') with within-group index
-    j - offsets[i-1]. Returns (row_idx, within_idx, valid)."""
-    total = offsets[-1]
-    j = jnp.arange(out_cap)
-    i = jnp.searchsorted(offsets, j, side="right")
-    prev = jnp.where(i > 0, offsets[jnp.maximum(i - 1, 0)], 0)
-    within = j - prev
-    valid = j < total
-    return i, within, valid, total
+    j - offsets[i-1]. Returns (row_idx, within_idx, valid, total).
+    Kept as the jnp reference; ``join`` dispatches through
+    ``KernelDispatch.expand``."""
+    del counts  # offsets alone determine the expansion
+    from repro.kernels import ref
+    return ref.expand_indices_ref(offsets, out_cap)
 
 
 def join(left: Relation, right: Relation,
@@ -158,27 +255,31 @@ def join(left: Relation, right: Relation,
          l_out: tuple[int, ...], r_out: tuple[int, ...],
          sr: Semiring, out_cap: int,
          arranged: bool = False,
-         backend: Optional[KernelDispatch] = None):
+         backend: Optional[KernelDispatch] = None,
+         cache: Optional[ArrangementCache] = None):
     """Sort-merge inner join. Output columns = left[l_out] ++ right[r_out]
     (unsorted; callers dedupe/arrange downstream). Returns
     (data, val, valid_mask, total, overflow) — 'loose rows', so fused
     consumers (Join-FlatMap) can filter/project before compaction.
 
-    The count/locate phase (probe ranks) goes through the injected
-    ``backend`` (backend.py): both sides are arrangements, so the key
-    word vectors are sorted and the blocked Pallas merge-path probe
-    applies — single-word for <= 3 key columns (the narrow fast path),
-    word-wise for wider keys. The bounded expand stays jnp."""
+    Both operand arrangements resolve through ``cache`` when given, so
+    rules/subplans of the same evaluation pass share one sort per
+    (relation, key). The count/locate phase (probe ranks) and the
+    bounded expand both go through the injected ``backend``
+    (backend.py): both sides are arrangements, so the key word vectors
+    are sorted and the blocked Pallas merge-path probe applies —
+    single-word for <= 3 key columns (the narrow fast path), word-wise
+    for wider keys."""
     bk = backend or JNP
     if not arranged:
-        left = arrange(left, l_keys)
-        right = arrange(right, r_keys)
+        left = _arrange(cache, left, l_keys)
+        right = _arrange(cache, right, r_keys)
     lk = pack_key_words(left.data, l_keys, live_mask(left))
     rk = pack_key_words(right.data, r_keys, live_mask(right))
     lo, hi = _probe_ranks(bk, rk, lk)
     counts = jnp.where(live_mask(left), hi - lo, 0)
     offsets = jnp.cumsum(counts)
-    li, within, valid, total = expand_indices(counts, offsets, out_cap)
+    li, within, valid, total = bk.expand(offsets, out_cap)
     ri = _take_rows(lo, li) + within
     ldata = _take_rows(left.data, li)
     rdata = _take_rows(right.data, ri)
@@ -201,7 +302,8 @@ def join(left: Relation, right: Relation,
 def membership(left: Relation, right: Relation,
                l_keys: tuple[int, ...], r_keys: tuple[int, ...],
                right_arranged: bool = False,
-               backend: Optional[KernelDispatch] = None) -> jax.Array:
+               backend: Optional[KernelDispatch] = None,
+               cache: Optional[ArrangementCache] = None) -> jax.Array:
     """Boolean mask over left rows: does the key appear in right?
     (The lift operator of Sec. 8 materializes this 0/1.)
 
@@ -215,7 +317,7 @@ def membership(left: Relation, right: Relation,
     in-kernel; the trailing live-mask AND discards them."""
     bk = backend or JNP
     if not right_arranged:
-        right = arrange(right, r_keys)
+        right = _arrange(cache, right, r_keys)
     if len(l_keys) == 0:
         # ground guard: right non-empty? (dead left rows stay dead —
         # without the mask a zero-key semijoin would resurrect the PAD
@@ -237,34 +339,42 @@ def membership(left: Relation, right: Relation,
 def semijoin(left: Relation, right: Relation,
              l_keys: tuple[int, ...], r_keys: tuple[int, ...],
              out_cap: Optional[int] = None, sr: Semiring = PRESENCE,
-             backend: Optional[KernelDispatch] = None):
+             backend: Optional[KernelDispatch] = None,
+             cache: Optional[ArrangementCache] = None):
     out_cap = out_cap or left.capacity
-    keep = membership(left, right, l_keys, r_keys, backend=backend)
+    keep = membership(left, right, l_keys, r_keys, backend=backend,
+                      cache=cache)
     d, v, n, ov = _scatter_compact(
         left.data, left.val, keep, out_cap,
         sr.identity if sr.has_value else 0)
-    return Relation(d, v if left.val is not None else None, n), ov
+    return Relation(d, v if left.val is not None else None, n,
+                    order=left.order), ov
 
 
 def antijoin(left: Relation, right: Relation,
              l_keys: tuple[int, ...], r_keys: tuple[int, ...],
              out_cap: Optional[int] = None, sr: Semiring = PRESENCE,
-             backend: Optional[KernelDispatch] = None):
+             backend: Optional[KernelDispatch] = None,
+             cache: Optional[ArrangementCache] = None):
     out_cap = out_cap or left.capacity
-    keep = (~membership(left, right, l_keys, r_keys, backend=backend)) & (
-        live_mask(left))
+    keep = (~membership(left, right, l_keys, r_keys, backend=backend,
+                        cache=cache)) & (live_mask(left))
     d, v, n, ov = _scatter_compact(
         left.data, left.val, keep, out_cap,
         sr.identity if sr.has_value else 0)
-    return Relation(d, v if left.val is not None else None, n), ov
+    return Relation(d, v if left.val is not None else None, n,
+                    order=left.order), ov
 
 
 def difference(a: Relation, b: Relation,
                backend: Optional[KernelDispatch] = None,
+               cache: Optional[ArrangementCache] = None,
                ) -> tuple[Relation, jax.Array]:
-    """Rows of a (all columns as key) not present in b."""
+    """Rows of a (all columns as key) not present in b. b is identity-
+    sorted in the engine (it is a maintained full arrangement), so with
+    the witness fast path its arrange is free."""
     cols = tuple(range(a.arity))
-    return antijoin(a, b, cols, cols, backend=backend)
+    return antijoin(a, b, cols, cols, backend=backend, cache=cache)
 
 
 def concat_all(rels: Sequence[Relation], sr: Semiring, out_cap: int,
@@ -279,25 +389,88 @@ def concat_all(rels: Sequence[Relation], sr: Semiring, out_cap: int,
     return dedupe(data, val, sr, out_cap, backend=backend)
 
 
+def merge_sorted(full: Relation, delta: Relation, sr: Semiring,
+                 out_cap: int,
+                 backend: Optional[KernelDispatch] = None):
+    """Incremental arrangement maintenance: full ∪ delta for two
+    identity-sorted arrangements WITHOUT re-sorting the world.
+
+    Both operands are sorted, distinct, PAD-tailed arrangements, so the
+    union is a stable two-pointer merge: the ``merge_ranks`` dispatch
+    entry (backend.py) computes each side's output position by rank
+    (full wins ties, so duplicate rows land adjacent with full's copy
+    first — exactly the order the old concat + stable lexsort
+    produced), rows scatter once into a [cap_f + cap_d] buffer, and
+    ``dedupe(assume_sorted=True)`` combines duplicates and compacts.
+    Per-iteration cost drops from O((n + Δ) log (n + Δ)) sort-everything
+    to O(n + Δ) merge — byte-identical output.
+
+    Row order is the full-row packed key (relation.pack_key_words), the
+    same keys ``merge_with_delta``'s lattice lookup and ``difference``
+    already rely on — so this path adds no new value-range assumption.
+    Dead rows key as KEY_PAD and land in (or are dropped past) the PAD
+    tail; either way the buffer byte-matches across backends."""
+    bk = backend or JNP
+    COUNTERS["merge_sorted"] += 1
+    m, n = full.capacity, delta.capacity
+    cols = tuple(range(full.arity))
+    fk = pack_key_words(full.data, cols, live_mask(full))
+    dk = pack_key_words(delta.data, cols, live_mask(delta))
+    if fk.shape[1] == 1:
+        pos_f, pos_d = bk.merge_ranks(fk[:, 0], dk[:, 0])
+    else:
+        pos_f, pos_d = bk.merge_ranks_multi(fk, dk)
+    data = jnp.full((m + n, full.arity), PAD, jnp.int32)
+    data = data.at[pos_f].set(full.data, mode="drop")
+    data = data.at[pos_d].set(delta.data, mode="drop")
+    val = None
+    if sr.has_value:
+        fval = full.val if full.val is not None else jnp.ones(
+            (m,), sr.dtype)
+        dval = delta.val if delta.val is not None else jnp.ones(
+            (n,), sr.dtype)
+        val = jnp.full((m + n,), sr.identity, sr.dtype)
+        val = val.at[pos_f].set(fval, mode="drop")
+        val = val.at[pos_d].set(dval, mode="drop")
+    return dedupe(data, val, sr, out_cap, assume_sorted=True,
+                  backend=backend)
+
+
 def merge(full: Relation, delta: Relation, sr: Semiring, out_cap: int,
-          backend: Optional[KernelDispatch] = None):
-    """full ∪ delta with sr.add combine. Returns (Relation, overflow)."""
+          backend: Optional[KernelDispatch] = None,
+          incremental: bool = True):
+    """full ∪ delta with sr.add combine. Returns (Relation, overflow).
+
+    When both operands are identity-sorted arrangements (the engine's
+    maintained fulls and deltas always are) the union runs through
+    ``merge_sorted`` — incremental maintenance with no full re-sort.
+    ``incremental=False`` (or an operand with a non-identity witness)
+    falls back to concat + sort; the two paths are byte-identical."""
+    if incremental and full.identity_sorted and delta.identity_sorted:
+        return merge_sorted(full, delta, sr, out_cap, backend=backend)
     return concat_all([full, delta], sr, out_cap, backend=backend)
 
 
 def merge_with_delta(full: Relation, derived: Relation, sr: Semiring,
                      out_cap: int,
-                     backend: Optional[KernelDispatch] = None):
+                     backend: Optional[KernelDispatch] = None,
+                     cache: Optional[ArrangementCache] = None,
+                     incremental: bool = True):
     """Merge ``derived`` into ``full``; return (new_full, new_delta, ovf).
 
     PRESENCE: delta = derived rows not already in full (set difference).
     MIN/MAX:  delta = rows whose lattice value strictly improved.
     This single primitive is the semi-naive frontier step (Sec. 2.2) and
-    the monoid iteration of Sec. 9.
+    the monoid iteration of Sec. 9. The full-arrangement update is the
+    incremental ``merge_sorted`` path (see ``merge``); the difference's
+    arrange of ``full`` resolves via ``cache``/witness, so the frontier
+    step re-sorts nothing.
     """
-    new_full, ov1 = merge(full, derived, sr, out_cap, backend=backend)
+    new_full, ov1 = merge(full, derived, sr, out_cap, backend=backend,
+                          incremental=incremental)
     if not sr.has_value:
-        delta, ov2 = difference(derived, full, backend=backend)
+        delta, ov2 = difference(derived, full, backend=backend,
+                                cache=cache)
         return new_full, delta, ov1 | ov2
     # lattice: look up each new_full row's key in old full, compare
     # values. Both arrays are sorted arrangements, so the lookup is a
@@ -327,16 +500,18 @@ def merge_with_delta(full: Relation, derived: Relation, sr: Semiring,
 
 def reduce_groups(rel: Relation, group_cols: tuple[int, ...],
                   aggs: tuple[tuple[str, int], ...], out_cap: int,
-                  backend: Optional[KernelDispatch] = None):
+                  backend: Optional[KernelDispatch] = None,
+                  cache: Optional[ArrangementCache] = None):
     """Stratified grouped aggregation: sort by group key, segment-reduce.
     Output data columns = group_cols ++ one column per agg. COUNT counts
     *distinct* tuples (set semantics, matching Datalog COUNT(y)).
 
     The segment reduction dispatches through ``backend`` — segment ids
     are sorted ascending by construction (rows are arranged by group
-    key), which is exactly the Pallas kernel's contract."""
+    key), which is exactly the Pallas kernel's contract. The group-key
+    arrangement resolves through ``cache``/witness like the join's."""
     bk = backend or JNP
-    r = arrange(rel, group_cols)
+    r = _arrange(cache, rel, group_cols)
     live = live_mask(r)
     gkey = pack_key_words(r.data, group_cols, live)
     first = jnp.concatenate(

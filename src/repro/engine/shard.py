@@ -37,6 +37,15 @@ rows are re-homed by their full output row before merging into an IDB
 (``ShardedEngine._merge_head``), which is what makes the sharded delta
 *exactly* the single-device delta, shard by shard.
 
+**Arrangements.** Every shard block is a valid sorted arrangement, so
+the arrangement layer (relation.py docstring) applies shard-locally
+unchanged: full/delta merges maintain each shard's arrangement
+incrementally (``relops.merge_sorted`` — no per-iteration re-sort),
+and the per-pass ``ArrangementCache`` additionally memoizes
+*repartitions* by operand identity (``ShardedEvaluator._repart``), so
+a shard-local arrangement built by one rule's all-to-all survives for
+every other rule of the pass keyed the same way.
+
 **Fixpoint driver.** ``ShardedEngine`` mirrors ``Engine._run_stratum``:
 
 * ``host`` mode — one jitted ``shard_map`` step per iteration; the
@@ -216,8 +225,21 @@ class ShardedEvaluator(Evaluator):
         self.num_shards = num_shards
 
     def _repart(self, rel: Relation, key_cols: tuple[int, ...]):
-        return repartition(rel, key_cols, self.cfg.semiring,
-                           self.num_shards, backend=self.cfg.backend)
+        """All-to-all repartition on the operation key — memoized per
+        evaluation pass when the arrangement cache is on, so one
+        repartition (collective included) serves every rule/subplan
+        keyed the same way on the same operand: the shard-local
+        arrangement produced by a repartition survives for the rest of
+        the pass instead of being rebuilt per op."""
+        key_cols = tuple(key_cols)
+        if self.cache is None:
+            return repartition(rel, key_cols, self.cfg.semiring,
+                               self.num_shards, backend=self.cfg.backend)
+        return self.cache.memo(
+            ("repart", key_cols), (rel.data, rel.val, rel.n),
+            lambda: repartition(rel, key_cols, self.cfg.semiring,
+                                self.num_shards,
+                                backend=self.cfg.backend))
 
     def _join_op(self, left, right, l_keys, r_keys, l_out, r_out, out_cap):
         left, ov1 = self._repart(left, l_keys)
@@ -348,7 +370,7 @@ class ShardedEngine(Engine):
                 " use Engine for incremental maintenance")
         cfg = self.cfg
         lcfg = LowerConfig(cfg.intermediate_cap, cfg.semiring,
-                           self.backend)
+                           self.backend, cfg.arrangements)
         ev = ShardedEvaluator(lcfg, self.num_shards)
         monoid_names = set(self.monoid)
         idbs = sorted(sp.idbs)
@@ -440,7 +462,8 @@ class ShardedEngine(Engine):
                 full, delta = state[name]
                 merged, ov = R.merge(full, delta, self._sr_of(name),
                                      self._idb_cap(name),
-                                     backend=self.backend)
+                                     backend=self.backend,
+                                     incremental=cfg.arrangements)
                 ovf |= ov
                 out[name] = merged
             return _restack(out), ovf[None]

@@ -55,15 +55,33 @@ physical execution backend on TPU rather than standalone demos:
                        and Pallas backends emit byte-identical
                        relations (tests/test_backend_equivalence.py).
 
+  merge_ranks        — output positions of a stable two-pointer merge
+                       of two sorted key sequences (plus the
+                       ``merge_ranks_multi`` word-vector variant):
+                       incremental arrangement maintenance behind
+                       ``relops.merge_sorted`` — the semi-naive
+                       frontier step merges the sorted ``full`` with
+                       the small sorted ``delta`` by rank instead of
+                       concat + full re-sort. The Pallas path reuses
+                       the merge-path probe kernel for both rank
+                       passes (one lower-rank, one upper-rank).
+  expand_indices     — the join's bounded expand behind
+                       ``KernelDispatch.expand``: jnp reference on
+                       every backend today; a dedicated Pallas expand
+                       kernel plugs in behind the same entry point.
+
 Still jnp-only (future kernels plug into the same dispatch seam):
-the bounded expand inside ``join`` and a fused dedupe-compare kernel.
+the Pallas body for ``expand_indices`` and a fused dedupe-compare
+kernel.
 """
 from repro.kernels.ops import (
     segment_reduce, merge_probe_counts, merge_probe_multi,
+    merge_ranks, merge_ranks_multi, expand_indices,
     fm_interaction, flash_attention, flash_decode,
 )
 
 __all__ = [
     "segment_reduce", "merge_probe_counts", "merge_probe_multi",
+    "merge_ranks", "merge_ranks_multi", "expand_indices",
     "fm_interaction", "flash_attention", "flash_decode",
 ]

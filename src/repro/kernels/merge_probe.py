@@ -148,6 +148,58 @@ def merge_probe_pallas(
     return lo[:n], hi[:n]
 
 
+# -- merge ranks (incremental arrangement maintenance) -----------------------
+
+def merge_ranks_pallas(a_keys: jax.Array, b_keys: jax.Array,
+                       probe_block: int = 512, build_block: int = 1024,
+                       interpret: bool = False):
+    """Merge-path output positions for a stable two-pointer merge of two
+    sorted key sequences (``a`` wins ties) — the Pallas counterpart of
+    ``ref.merge_ranks_ref``, reusing the blocked merge-path partitioner
+    of ``merge_probe_pallas`` for both rank passes: pos_a needs a's
+    lower rank in b, pos_b needs b's upper rank in a, and both sides
+    are sorted arrangements, so each pass is exactly the probe kernel's
+    contract (block min/max skip + diagonal-band compares).
+
+    PAD caveat (inherited from the probe kernel): for KEY_PAD rows of b
+    the upper rank may additionally count a's block padding, pushing
+    pos_b past m + n. Consumers scatter with drop mode — dead rows
+    carry PAD data and identity payload, so landing in the tail and
+    being dropped are byte-identical outcomes."""
+    m, n = a_keys.shape[0], b_keys.shape[0]
+    lo_a, _ = merge_probe_pallas(b_keys, a_keys,
+                                 probe_block=probe_block,
+                                 build_block=build_block,
+                                 interpret=interpret)
+    _, hi_b = merge_probe_pallas(a_keys, b_keys,
+                                 probe_block=probe_block,
+                                 build_block=build_block,
+                                 interpret=interpret)
+    pos_a = jnp.arange(m, dtype=jnp.int32) + lo_a
+    pos_b = jnp.arange(n, dtype=jnp.int32) + hi_b
+    return pos_a, pos_b
+
+
+def merge_ranks_multi_pallas(a_words: jax.Array, b_words: jax.Array,
+                             probe_block: int = 512,
+                             build_block: int = 1024,
+                             interpret: bool = False):
+    """Multi-word ``merge_ranks_pallas``: [m, W] / [n, W] int64 key
+    vectors through the chunked merge-path kernel."""
+    m, n = a_words.shape[0], b_words.shape[0]
+    lo_a, _ = merge_probe_multi_pallas(b_words, a_words,
+                                       probe_block=probe_block,
+                                       build_block=build_block,
+                                       interpret=interpret)
+    _, hi_b = merge_probe_multi_pallas(a_words, b_words,
+                                       probe_block=probe_block,
+                                       build_block=build_block,
+                                       interpret=interpret)
+    pos_a = jnp.arange(m, dtype=jnp.int32) + lo_a
+    pos_b = jnp.arange(n, dtype=jnp.int32) + hi_b
+    return pos_a, pos_b
+
+
 # -- multi-word keys ---------------------------------------------------------
 
 def _chunk_lex_lt_le(a_chunks, b_chunks):

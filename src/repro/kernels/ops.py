@@ -20,6 +20,7 @@ from repro.kernels.flash_attention import (
 )
 from repro.kernels.merge_probe import (
     merge_probe_multi_pallas, merge_probe_pallas,
+    merge_ranks_multi_pallas, merge_ranks_pallas,
 )
 from repro.kernels.segment_reduce import segment_reduce_pallas
 
@@ -61,6 +62,36 @@ def merge_probe_multi(build_words, probe_words, backend=None, **kw):
         return ref.merge_probe_multi_ref(build_words, probe_words)
     return merge_probe_multi_pallas(
         build_words, probe_words, interpret=(backend == "interpret"), **kw)
+
+
+def merge_ranks(a_keys, b_keys, backend=None, **kw):
+    """Stable two-pointer merge positions of two sorted int64 key
+    sequences (incremental arrangement maintenance; see
+    ``ref.merge_ranks_ref`` for the rank formulation)."""
+    backend = _resolve(backend)
+    if backend == "xla":
+        return ref.merge_ranks_ref(a_keys, b_keys)
+    return merge_ranks_pallas(
+        a_keys, b_keys, interpret=(backend == "interpret"), **kw)
+
+
+def merge_ranks_multi(a_words, b_words, backend=None, **kw):
+    """Multi-word variant of ``merge_ranks``: [m, W] / [n, W] int64
+    lexicographic key vectors (relation.pack_key_words)."""
+    backend = _resolve(backend)
+    if backend == "xla":
+        return ref.merge_ranks_multi_ref(a_words, b_words)
+    return merge_ranks_multi_pallas(
+        a_words, b_words, interpret=(backend == "interpret"), **kw)
+
+
+def expand_indices(offsets, out_cap, backend=None):
+    """The join's bounded expand (repeat-by-counts). jnp reference on
+    every backend for now — a dedicated Pallas expand kernel plugs in
+    behind this same entry point later (ROADMAP 'Kernel-dispatch
+    seam')."""
+    del backend  # single implementation today; seam kept stable
+    return ref.expand_indices_ref(offsets, out_cap)
 
 
 def fm_interaction(x, v, backend=None, **kw):

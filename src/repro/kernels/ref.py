@@ -71,6 +71,47 @@ def merge_probe_multi_ref(build_words: jax.Array, probe_words: jax.Array):
     return search(False), search(True)
 
 
+def merge_ranks_ref(a_keys: jax.Array, b_keys: jax.Array):
+    """Output positions of a stable two-pointer merge of two sorted key
+    sequences (``a`` wins ties): pos_a[i] = i + #{b < a[i]},
+    pos_b[j] = j + #{a <= b[j]}. Scattering a's rows to pos_a and b's
+    rows to pos_b yields the sorted interleave of the two sequences
+    with equal keys adjacent (a's copy first) — the rank formulation of
+    incremental arrangement maintenance (relops.merge_sorted). Returns
+    (pos_a, pos_b) int32."""
+    m, n = a_keys.shape[0], b_keys.shape[0]
+    pos_a = jnp.arange(m, dtype=jnp.int32) + jnp.searchsorted(
+        b_keys, a_keys, side="left").astype(jnp.int32)
+    pos_b = jnp.arange(n, dtype=jnp.int32) + jnp.searchsorted(
+        a_keys, b_keys, side="right").astype(jnp.int32)
+    return pos_a, pos_b
+
+
+def merge_ranks_multi_ref(a_words: jax.Array, b_words: jax.Array):
+    """Multi-word variant of ``merge_ranks_ref``: [m, W] / [n, W] int64
+    lexicographic key vectors (relation.pack_key_words), both sorted
+    ascending word-wise."""
+    m, n = a_words.shape[0], b_words.shape[0]
+    lo_a, _ = merge_probe_multi_ref(b_words, a_words)
+    _, hi_b = merge_probe_multi_ref(a_words, b_words)
+    pos_a = jnp.arange(m, dtype=jnp.int32) + lo_a
+    pos_b = jnp.arange(n, dtype=jnp.int32) + hi_b
+    return pos_a, pos_b
+
+
+def expand_indices_ref(offsets: jax.Array, out_cap: int):
+    """The join's bounded 'repeat' pattern: output slot j maps to input
+    row i = searchsorted(offsets, j, 'right') with within-group index
+    j - offsets[i-1]. Returns (row_idx, within_idx, valid, total)."""
+    total = offsets[-1]
+    j = jnp.arange(out_cap)
+    i = jnp.searchsorted(offsets, j, side="right")
+    prev = jnp.where(i > 0, offsets[jnp.maximum(i - 1, 0)], 0)
+    within = j - prev
+    valid = j < total
+    return i, within, valid, total
+
+
 def fm_interaction_ref(x: jax.Array, v: jax.Array) -> jax.Array:
     """FM 2-way term [Rendle ICDM'10]: x [b, f] feature values,
     v [f, k] factor embeddings. Returns [b]:
