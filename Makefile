@@ -8,7 +8,7 @@
 PYTEST = PYTHONPATH=src python -m pytest
 
 .PHONY: test test-fast test-sharded bench-backends bench-sharding \
-	bench-wide bench-arrange bench-smoke
+	bench-wide bench-arrange bench-incremental bench-smoke
 
 test:
 	$(PYTEST) -x -q
@@ -19,7 +19,7 @@ test-fast:
 test-sharded:
 	XLA_FLAGS="--xla_force_host_platform_device_count=8" \
 		$(PYTEST) -x -q tests/test_sharded.py tests/test_wide.py \
-		tests/test_arrange.py
+		tests/test_arrange.py tests/test_update_streams.py
 
 bench-backends:
 	PYTHONPATH=src python -m benchmarks.run --only backends
@@ -33,6 +33,12 @@ bench-wide:
 
 bench-arrange:
 	PYTHONPATH=src python -m benchmarks.run --only arrange
+
+# per-update maintenance latency vs batch recompute, single-device and
+# 8-shard (forced host devices)
+bench-incremental:
+	XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+		PYTHONPATH=src python -m benchmarks.run --only incremental
 
 # CI push-tier bitrot guard: the bench harness end-to-end on tiny
 # inputs, written to a scratch file so real results are not clobbered

@@ -17,7 +17,7 @@ ALL_TABLES = ("table1", "seminaive", "robustness", "specialization",
 
 # the cheap tables --smoke runs by default (CI bitrot guard: the bench
 # harness executes end-to-end on every push, in seconds)
-SMOKE_TABLES = ("arrange",)
+SMOKE_TABLES = ("arrange", "incremental")
 
 
 def collect(only=None, smoke: bool = False) -> list[dict]:
@@ -37,8 +37,8 @@ def collect(only=None, smoke: bool = False) -> list[dict]:
         from benchmarks.specialization import bench
         rows += bench()
     if "incremental" in only:
-        from benchmarks.incremental_bench import bench
-        rows += bench()
+        from benchmarks.incremental import bench
+        rows += bench(smoke=smoke)
     if "kernels" in only:
         from benchmarks.kernels_bench import bench
         rows += bench()

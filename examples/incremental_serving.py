@@ -3,6 +3,13 @@ deployment (DDlog's use case, Sec. 9): materialize views over a live
 fact stream, answer after every update batch, track latency.
 
     PYTHONPATH=src python examples/incremental_serving.py [--updates 30]
+
+``--shards N`` serves the same stream from a hash-partitioned mesh
+(incremental maintenance runs shard-local; see engine/incremental.py's
+sharded-maintenance contract). On CPU, force host devices first:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+        PYTHONPATH=src python examples/incremental_serving.py --shards 8
 """
 import argparse
 import time
@@ -10,8 +17,7 @@ import time
 import numpy as np
 
 from repro.core.optimizer import compile_program
-from repro.engine import EngineConfig
-from repro.engine.incremental import IncrementalEngine
+from repro.engine import EngineConfig, make_engine
 
 # network reachability monitoring: link updates stream in; the view is
 # which hosts can reach the monitoring target, avoiding quarantined ones
@@ -32,13 +38,18 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--updates", type=int, default=30)
     ap.add_argument("--hosts", type=int, default=200)
+    ap.add_argument("--shards", type=int, default=0,
+                    help="serve from an N-shard mesh (needs N devices)")
     args = ap.parse_args()
 
     rng = np.random.default_rng(1)
     links = rng.integers(0, args.hosts, size=(args.hosts * 4, 2))
 
-    inc = IncrementalEngine(compile_program(PROGRAM), EngineConfig(
-        idb_cap=1 << 12, intermediate_cap=1 << 14))
+    inc = make_engine(
+        compile_program(PROGRAM),
+        EngineConfig(idb_cap=1 << 12, intermediate_cap=1 << 14,
+                     shards=args.shards),
+        incremental=True)
     t0 = time.perf_counter()
     out = inc.initialize({
         "link": links,

@@ -8,11 +8,19 @@ from repro.engine.backend import (
 from repro.engine.engine import Engine, EngineConfig, EngineStats
 
 
-def make_engine(compiled, config: EngineConfig | None = None) -> Engine:
+def make_engine(compiled, config: EngineConfig | None = None,
+                incremental: bool = False):
     """Engine factory: ``config.shards >= 2`` selects the sharded
     multi-device driver (engine/shard.py), else the single-device
     Engine. The two are byte-identical in results and iteration counts
-    (tests/test_sharded.py)."""
+    (tests/test_sharded.py). ``incremental=True`` wraps the selected
+    driver in an ``IncrementalEngine`` (engine/incremental.py) — the
+    two axes compose: ``shards=N`` + ``incremental=True`` maintains the
+    materialized state shard-local across the update stream
+    (tests/test_update_streams.py)."""
+    if incremental:
+        from repro.engine.incremental import IncrementalEngine
+        return IncrementalEngine(compiled, config)
     if config is not None and int(config.shards or 0) >= 2:
         from repro.engine.shard import ShardedEngine
         return ShardedEngine(compiled, config)

@@ -32,8 +32,8 @@ from repro.engine import relops as R
 from repro.engine.backend import KernelDispatch, resolve_backend
 from repro.engine.lower import Env, Evaluator, LowerConfig
 from repro.engine.relation import (
-    PAD, Relation, UNSORTED, empty, from_numpy, live_mask, to_numpy,
-    to_numpy_with_val,
+    PAD, Relation, UNSORTED, empty, from_numpy, live_mask, pow2_cap,
+    to_numpy, to_numpy_with_val,
 )
 from repro.engine.semiring import (
     COUNTING, PRESENCE, Semiring, monoid_for,
@@ -101,6 +101,30 @@ class Engine:
         self.monoid: dict[str, tuple[Semiring, int]] = {}
         for name, (func, vpos) in compiled.monoid_idbs.items():
             self.monoid[name] = (monoid_for(func), vpos)
+        # jitted stratum step functions, memoized across runs/updates
+        # (see _memo_jit) — an update stream re-executes the same
+        # compiled step instead of re-tracing it per update
+        self._jit_memo: dict = {}
+
+    def _memo_jit(self, key: tuple, make):
+        """Memoize a jitted stratum function across run()/apply() calls.
+
+        The closures handed in depend only on the stratum plan and the
+        engine capacities, so one compiled step serves every batch run
+        AND every incremental update at the same capacities — this is
+        what makes per-update maintenance latency a steady-state
+        execute instead of a fresh trace each time. Capacity changes
+        (auto_grow) change the key and re-trace; ``cfg.jit=False``
+        bypasses the memo entirely."""
+        if not self.cfg.jit:
+            return make()
+        key = key + (self.cfg.intermediate_cap, self.cfg.idb_cap,
+                     tuple(sorted(self.cfg.idb_caps.items())))
+        fn = self._jit_memo.get(key)
+        if fn is None:
+            fn = jax.jit(make())
+            self._jit_memo[key] = fn
+        return fn
 
     # -- helpers -------------------------------------------------------------
     def _idb_cap(self, name: str) -> int:
@@ -262,6 +286,116 @@ class Engine:
             new_state[name] = (nf, nd)
         return new_state, ovf | env.overflow
 
+    def _stratum_seed(self, given, idbs, ev):
+        """Seeded semi-naive continuation entry: merge each IDB's seed
+        delta into its stored full arrangement -> (full, delta) state.
+        Shared per-shard body — ``ShardedEngine`` runs it inside
+        shard_map, so a seeded continuation executes identical code on
+        one device and on every shard. The stored fulls are still
+        sorted arrangements, so the seed merge is the incremental
+        ``merge_sorted`` path (no re-sort of the materialized state)."""
+        cache = ev.begin_pass()
+        state = {}
+        ovf = jnp.zeros((), bool)
+        for name in idbs:
+            full, seed = given[name]
+            sr = self._sr_of(name)
+            if seed is None:
+                state[name] = (full, self._empty_idb(name))
+            else:
+                nf, nd, ov = R.merge_with_delta(
+                    full, seed, sr, self._idb_cap(name),
+                    backend=self.backend, cache=cache,
+                    incremental=self.cfg.arrangements)
+                ovf |= ov
+                state[name] = (nf, nd)
+        return state, ovf
+
+    def _rule_pass_body(self, rels, roots, restrict, ev):
+        """Shared maintenance-pass body (incremental.py): evaluate
+        pre-retagged rule roots against the stored relations, union the
+        results per head (``_merge_head`` re-homes rows in the sharded
+        driver), and optionally restrict a head to candidate rows via
+        the evaluator's semijoin hook (which co-partitions under
+        sharding). One arrangement scope spans the whole pass, so every
+        retagged occurrence shares the stored fulls' arrangements."""
+        ev.begin_pass()
+        env = Env(dict(rels), self.compiled.shared, set(self.monoid))
+        by_head: dict[str, list[Relation]] = {}
+        for head, root in roots:
+            out = ev.eval(root, env)
+            by_head.setdefault(head, []).append(
+                self._split_monoid(head, out))
+        derived: dict[str, Relation] = {}
+        for head, outs in by_head.items():
+            merged, ov = self._merge_head(
+                outs, self._sr_of(head), self._idb_cap(head))
+            env.overflow = env.overflow | ov
+            cand = restrict.get(head)
+            if cand is not None:
+                cols = tuple(range(merged.arity))
+                merged, ov2 = ev._semijoin_op(merged, cand, cols, cols)
+                env.overflow = env.overflow | ov2
+            derived[head] = merged
+        return derived, env.overflow
+
+    # -- maintenance driver hooks (single-device; ShardedEngine overrides) ----
+    def _maintenance_evaluator(self) -> Evaluator:
+        return Evaluator(LowerConfig(
+            self.cfg.intermediate_cap, self.cfg.semiring, self.backend,
+            self.cfg.arrangements))
+
+    def run_rule_pass(self, env_rels, roots, restrict=None,
+                      memo_key=None) -> dict:
+        """Driver entry for an incremental maintenance pass: ``roots``
+        is a list of (head, retagged IR) pairs; ``env_rels`` maps
+        (name, version) to stored relations (including any
+        changed-occurrence entries); ``restrict`` optionally maps a
+        head to a candidate relation its result is semijoined with.
+        Returns head -> stored relation.
+
+        ``memo_key`` must uniquely determine the *structure* of the
+        pass (which rules, which retagged occurrences, which restrict
+        heads — the callers derive it from the stratum index and the
+        changed-relation names); when given, the traced pass is
+        memo-jitted so a stream of updates touching the same relations
+        re-executes one compiled pass instead of re-tracing."""
+        restrict = restrict or {}
+        ev = self._maintenance_evaluator()
+
+        def pass_fn(rels, rs):
+            return self._rule_pass_body(rels, roots, rs, ev)
+
+        if memo_key is None:
+            derived, ovf = pass_fn(dict(env_rels), restrict)
+        else:
+            fn = self._memo_jit(("rule_pass",) + tuple(memo_key),
+                                lambda: pass_fn)
+            derived, ovf = fn(dict(env_rels), restrict)
+        if bool(np.asarray(ovf).any()):
+            raise OverflowError_("overflow in incremental rule pass")
+        return derived
+
+    def _stored(self, rels: dict) -> dict:
+        """Host-built Relations -> this driver's storage form (identity
+        here; ShardedEngine scatters each to its home shards)."""
+        return rels
+
+    def _stored_empty_idb(self, name: str):
+        return self._empty_idb(name)
+
+    def _difference_stored(self, rel, sub):
+        """Stored-form set difference (DRed candidate removal)."""
+        out, _ = R.difference(rel, sub, backend=self.backend)
+        return out
+
+    def _union_stored(self, rels: list, sr: Semiring, cap: int):
+        """Stored-form union (combining maintenance seed sets)."""
+        out, ov = R.concat_all(rels, sr, cap, backend=self.backend)
+        if bool(np.asarray(ov).any()):
+            raise OverflowError_("overflow combining maintenance seeds")
+        return out
+
     # -- stratum execution ----------------------------------------------------
     def _run_stratum(self, sp: I.StratumPlan, env_rels, stats,
                      stratum_key, init_state=None):
@@ -287,29 +421,17 @@ class Engine:
 
         if init_state is not None:
             # incremental continuation: merge seed deltas into given
-            # fulls — the stored fulls are still sorted arrangements,
-            # so the seed merge reuses them incrementally (no re-sort
-            # of the materialized state on resume)
-            def seed_fn(given):
-                cache = ev.begin_pass()
-                state = {}
-                ovf = jnp.zeros((), bool)
-                for name in idbs:
-                    full, seed = given[name]
-                    sr = self._sr_of(name)
-                    if seed is None:
-                        state[name] = (full, self._empty_idb(name))
-                    else:
-                        nf, nd, ov = R.merge_with_delta(
-                            full, seed, sr, self._idb_cap(name),
-                            backend=self.backend, cache=cache,
-                            incremental=cfg.arrangements)
-                        ovf |= ov
-                        state[name] = (nf, nd)
-                return state, ovf
-            state, ovf = seed_fn(init_state)
+            # fulls (shared body; ShardedEngine runs it under shard_map).
+            # None-seeds are part of the pytree structure, so the memo
+            # retraces automatically when a different IDB subset is
+            # seeded.
+            seed_step = self._memo_jit(
+                ("seed", sp.index),
+                lambda: lambda given: self._stratum_seed(given, idbs, ev))
+            state, ovf = seed_step(init_state)
         else:
-            init_jit = jax.jit(init_fn) if cfg.jit else init_fn
+            init_jit = self._memo_jit(("init", sp.index),
+                                      lambda: init_fn)
             state, ovf = init_jit(dict(base_env_rels))
         if bool(ovf):
             raise OverflowError_(f"overflow during init of {stratum_key}")
@@ -336,22 +458,25 @@ class Engine:
                 state, any_delta, ovf, it = carry
                 return any_delta & (it < cfg.max_iters) & (~ovf)
 
-            def body(carry):
-                state, _, ovf, it = carry
-                ns, nd, ov = iter_fn(state, base_env_rels)
-                return ns, nd, ovf | ov, it + 1
+            # base env is an argument (not a closure capture) so the
+            # memoized compiled loop serves every run/update — same
+            # shape as the sharded driver's device_fn
+            def run(carry, base):
+                def body(c):
+                    st, _, ovf, it = c
+                    ns, nd, ov = iter_fn(st, base)
+                    return ns, nd, ovf | ov, it + 1
+                return jax.lax.while_loop(cond, body, carry)
 
             carry = (state, jnp.array(True), jnp.zeros((), bool),
                      jnp.zeros((), jnp.int32))
-            run = lambda c: jax.lax.while_loop(cond, body, c)
-            if cfg.jit:
-                run = jax.jit(run)
-            state, _, ovf, iters = run(carry)
+            run_step = self._memo_jit(("device", sp.index), lambda: run)
+            state, _, ovf, iters = run_step(carry, dict(base_env_rels))
             if bool(ovf):
                 raise OverflowError_(f"overflow in stratum {stratum_key}")
             stratum_iters = int(iters)
         else:
-            step = jax.jit(iter_fn) if cfg.jit else iter_fn
+            step = self._memo_jit(("iter", sp.index), lambda: iter_fn)
             while True:
                 sizes = {n: int(state[n][1].n) for n in idbs}
                 if all(v == 0 for v in sizes.values()):
@@ -416,9 +541,7 @@ class Engine:
                 raise ValueError(
                     f"EDB {name}: expected arity {arity}, "
                     f"got {data.shape[1]}")
-            cap = (edb_caps or {}).get(
-                name, max(16, int(2 ** np.ceil(np.log2(max(
-                    data.shape[0], 1) + 1)))))
+            cap = (edb_caps or {}).get(name, pow2_cap(data.shape[0]))
             env_rels[(name, I.FULL)] = from_numpy(data, cap)
         return env_rels
 

@@ -1,30 +1,65 @@
-"""Incremental Datalog maintenance (paper Sec. 9 'Algebraic Semantics').
+"""Incremental Datalog maintenance (paper Sec. 9 'Algebraic Semantics')
+— the sharded-maintenance contract.
 
 FlowLog supports both batch and incremental execution from the same IR.
-This module maintains materialized IDBs under EDB insertions/deletions:
+This module maintains materialized IDBs under EDB insertions/deletions,
+on one device or hash-partitioned across a shard mesh: the engine under
+maintenance is whatever ``repro.engine.make_engine`` selects from the
+config (``shards >= 2`` -> ``ShardedEngine``), and every maintenance
+pass executes the same per-shard code the batch fixpoint runs.
+
+Maintenance algorithm
+=====================
 
 * **Stratum pruning** — only strata downstream of a changed relation are
-  touched (dependency closure over the stratified program).
-* **Insertions** — seeded semi-naive continuation: every derivation using
-  at least one inserted tuple is produced by re-evaluating each rule with
-  one changed-relation occurrence retagged to scan only the inserted rows
-  (``retag_scans``); the resulting seed delta then drives the normal
-  semi-naive loop from the existing fixpoint. Sound and complete for set
-  semantics (duplicated derivations collapse under presence diffs).
+  touched (dependency closure over the stratified program). The pruning
+  and retag logic here is pure IR manipulation, independent of where
+  rows live; the data passes all go through driver hooks.
+* **Insertions** — seeded semi-naive continuation: every derivation
+  using at least one inserted tuple is produced by re-evaluating each
+  rule with one changed-relation occurrence retagged to scan only the
+  inserted rows (``retag_scans``); the resulting seed delta then drives
+  the normal semi-naive loop from the existing fixpoint
+  (``Engine._stratum_seed``). Sound and complete for set semantics.
 * **Deletions** — delete/re-derive (DRed, simplified): over-approximate
   deletable facts with the same seed trick against the *old* state,
-  remove them, then re-derive survivors by running the stratum's
-  semi-naive loop restricted to the candidate set, and continue to
-  fixpoint. Monoid (MIN/MAX) IDBs fall back to stratum recompute on
-  deletion — lattice values cannot be 'un-improved' without support
-  counting (documented limitation; matches DESIGN.md §5).
+  remove them, then re-derive survivors from the reduced state and
+  continue to fixpoint. Monoid (MIN/MAX) IDBs fall back to stratum
+  recompute on deletion — lattice values cannot be 'un-improved'
+  without support counting (documented limitation); the recompute runs
+  through the same driver (``_run_stratum``), so it too executes
+  sharded when the engine is sharded.
 
-Wide (>= 4-column) IDBs maintain like narrow ones: the seed unions,
-candidate semijoins, and full-relation differences all key on every
-stored column, which the relops resolve with multi-word lexicographic
-keys (relation.pack_key_words) — seeded continuations never see the
-arity (tests/test_wide.py pins insert and delete against batch
-recompute).
+Sharded-maintenance contract
+============================
+
+What stays **shard-local** (no communication): the seed merge into the
+stored fulls (``merge_with_delta`` per shard block — every block is a
+valid sorted arrangement), the semi-naive frontier differences, the
+DRed candidate removal (``_difference_stored``) and seed-set unions
+(``_union_stored``) — all of these key rows on every stored column, and
+home partitioning co-locates equal rows by full-row hash.
+
+What **repartitions** (all-to-all on the operation key): the joins /
+semijoins / reduces inside a retagged rule pass, exactly as in the
+batch fixpoint (``ShardedEvaluator``); derived head rows are re-homed
+by full output row before the per-head union (``_merge_head``). The
+DRed candidate/re-derive loop and the ``any_delta`` fixpoint test
+aggregate across shards with a one-scalar psum.
+
+What stays **host-side**: the EDB multiset mirror (``self.edbs``), the
+IR retagging, the DRed candidate frontier sets (small, bounded by the
+over-deletion), and the stratum-pruning closure. Stored fulls stay
+``ShardedRelation``s across the whole update stream — state is gathered
+to one host only in numpy export (``snapshot``/``to_numpy``) and when
+diffing IDB snapshots to feed downstream strata.
+
+Equivalence discipline: sharded maintenance is byte-identical to
+single-device maintenance — same post-update fixpoints, same iteration
+counts — at any shard count, on either kernel backend, for narrow and
+wide (multi-word key) programs alike (tests/test_update_streams.py
+pins this against from-scratch batch recompute after every update of a
+randomized stream).
 
 The maintained state IS an arrangement (relation.py docstring): the
 stored fulls stay sorted across updates, so a seeded continuation
@@ -36,20 +71,27 @@ stored relations' per-key arrangements.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
 from typing import Optional
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import ir as I
-from repro.engine import relops as R
-from repro.engine.engine import Engine, EngineConfig, EngineStats
-from repro.engine.lower import Env, Evaluator, LowerConfig
-from repro.engine.relation import Relation, from_numpy, to_numpy
-from repro.engine.semiring import PRESENCE
+from repro.engine import make_engine
+from repro.engine.engine import EngineConfig, EngineStats
+from repro.engine.relation import (
+    Relation, from_numpy, pow2_cap, to_numpy,
+)
 
 CHANGED = "changed"
+
+
+def _row_tuples(rows) -> list[tuple]:
+    """Update-batch rows -> list of tuples; tolerates empty batches
+    (a zero-row array cannot be reshaped with -1)."""
+    rows = np.asarray(rows)
+    if rows.size == 0:
+        return []
+    return [tuple(r) for r in rows.reshape(len(rows), -1)]
 
 
 def _unique_rules(plans: list[I.RulePlan]) -> list[I.RulePlan]:
@@ -82,12 +124,13 @@ def _retag_one_changed(root: I.IR, rel: str, occ: int) -> I.IR:
 
 
 class IncrementalEngine:
-    """Materialized-view maintenance over a CompiledProgram."""
+    """Materialized-view maintenance over a CompiledProgram, single-
+    device or sharded (``config.shards``)."""
 
     def __init__(self, compiled: I.CompiledProgram,
                  config: EngineConfig | None = None):
         self.compiled = compiled
-        self.engine = Engine(compiled, config)
+        self.engine = make_engine(compiled, config)
         self.edbs: dict[str, set[tuple]] = {}
         self._env: dict[tuple[str, str], Relation] = {}
         self._stats = EngineStats()
@@ -109,6 +152,15 @@ class IncrementalEngine:
                     cons.add(n)
             consumes[sp.index] = cons
         self._consumes = consumes
+        # relations consumed in a NEGATED position (under an Antijoin's
+        # right subtree) per stratum: seeded maintenance is monotone,
+        # but a change to a negated relation acts inverted on the head
+        # (deleting a negated fact can ADD head facts, inserting one
+        # can RETRACT them), so such strata fall back to recompute
+        self._neg_consumes = {
+            sp.index: set().union(*(self._negated_scans(p.root)
+                                    for p in sp.plans), set())
+            for sp in self.compiled.strata}
         downstream: dict[str, set[int]] = {}
 
         def affected(rels: set[str]) -> set[int]:
@@ -124,6 +176,27 @@ class IncrementalEngine:
             downstream[name] = affected({name})
         return downstream
 
+    def _negated_scans(self, root: I.IR) -> set[str]:
+        """Relations scanned under any Antijoin's negated (right) side,
+        expanding shared subplans."""
+
+        def scans_under(node) -> set[str]:
+            s: set[str] = set()
+            for m in I.iter_nodes(node):
+                if isinstance(m, I.Scan):
+                    s.add(m.rel)
+                elif isinstance(m, I.SharedRef):
+                    s |= scans_under(self.compiled.shared[m.ref])
+            return s
+
+        out: set[str] = set()
+        for n in I.iter_nodes(root):
+            if isinstance(n, I.Antijoin):
+                out |= scans_under(n.right)
+            elif isinstance(n, I.SharedRef):
+                out |= self._negated_scans(self.compiled.shared[n.ref])
+        return out
+
     def _shared_scans(self, root: I.IR) -> set[str]:
         out: set[str] = set()
         for n in I.iter_nodes(root):
@@ -137,9 +210,7 @@ class IncrementalEngine:
 
     # -- public ----------------------------------------------------------------
     def initialize(self, edbs: dict[str, np.ndarray]) -> dict[str, np.ndarray]:
-        self.edbs = {
-            k: set(map(tuple, np.asarray(v).reshape(len(v), -1)))
-            for k, v in edbs.items()}
+        self.edbs = {k: set(_row_tuples(v)) for k, v in edbs.items()}
         out, stats = self.engine.run(edbs)
         self._env = self.engine.last_env
         self._stats = stats
@@ -159,14 +230,14 @@ class IncrementalEngine:
         real_ins: dict[str, np.ndarray] = {}
         real_del: dict[str, np.ndarray] = {}
         for name, rows in inserts.items():
-            rows = [tuple(r) for r in np.asarray(rows).reshape(len(rows), -1)]
+            rows = _row_tuples(rows)
             new = [r for r in rows if r not in self.edbs.setdefault(
                 name, set())]
             self.edbs[name] |= set(new)
             if new:
                 real_ins[name] = np.array(sorted(set(new)))
         for name, rows in deletes.items():
-            rows = [tuple(r) for r in np.asarray(rows).reshape(len(rows), -1)]
+            rows = _row_tuples(rows)
             old = [r for r in rows if r in self.edbs.get(name, set())]
             self.edbs[name] -= set(old)
             if old:
@@ -179,12 +250,13 @@ class IncrementalEngine:
         for name in changed:
             affected |= self._downstream.get(name, set())
 
-        # refresh EDB relations in env
+        # refresh EDB relations in env (stored form: the sharded driver
+        # scatters each to its home shards)
         for name in changed:
             rows = np.array(sorted(self.edbs[name])) if self.edbs[name] else (
                 np.zeros((0, max(self.compiled.arities[name], 1))))
-            cap = max(16, int(2 ** np.ceil(np.log2(len(rows) + 1))))
-            self._env[(name, I.FULL)] = from_numpy(rows, cap)
+            self._env[(name, I.FULL)] = self.engine._stored(
+                {name: from_numpy(rows, pow2_cap(len(rows)))})[name]
 
         # change sets grow as strata update (IDB-level diffs feed downstream)
         ins_changes: dict[str, np.ndarray] = dict(real_ins)
@@ -209,7 +281,14 @@ class IncrementalEngine:
                 for p in sp.plans
                 if p.head not in self.compiled.monoid_idbs
                 for n in I.iter_nodes(p.root))
-            if agg_hit or (my_del and monoid_hit):
+            # a change to a relation this stratum NEGATES is inverted
+            # and non-monotone on the head (delete of a negated fact
+            # adds head facts; insert retracts them) — seeds cannot
+            # express either, so recompute (still through the driver:
+            # sharded engines recompute shard-local)
+            neg_hit = bool((set(my_ins) | set(my_del))
+                           & self._neg_consumes[sp.index])
+            if agg_hit or neg_hit or (my_del and monoid_hit):
                 self._recompute_stratum(sp)
             elif my_del:
                 self._dred_stratum(sp, my_ins, my_del)
@@ -228,19 +307,24 @@ class IncrementalEngine:
                     del_changes[n] = np.array(removed)
         return self.snapshot()
 
+    def _rows(self, rel) -> np.ndarray:
+        """Stored relation -> host rows (the one gather point)."""
+        return to_numpy(self.engine._host_relation(rel))
+
     def _snapshot_idb(self, name: str) -> np.ndarray:
         rel = self._env.get((name, I.FULL))
         if rel is None:
             return np.zeros((0, max(self.compiled.arities[name], 1)))
         if name in self.engine.monoid:
-            return self.engine.export_monoid(name, rel)
-        return to_numpy(rel)
+            return self.engine.export_monoid(
+                name, self.engine._host_relation(rel))
+        return self._rows(rel)
 
     def _rel_from_rows(self, name: str, rows: np.ndarray) -> Relation:
         """Rows (with monoid value column re-attached, if any) -> Relation
-        in stored layout."""
+        in stored layout (host-side; callers scatter via ``_stored``)."""
         rows = np.asarray(rows).reshape(len(rows), -1)
-        cap = max(16, int(2 ** np.ceil(np.log2(len(rows) + 1))))
+        cap = pow2_cap(len(rows))
         if name in self.engine.monoid:
             sr, vpos = self.engine.monoid[name]
             vals = rows[:, vpos]
@@ -251,16 +335,17 @@ class IncrementalEngine:
                               dedupe=False)
         return from_numpy(rows, cap)
 
+    def _stored_from_rows(self, rows_by_name: dict[str, np.ndarray]) -> dict:
+        return self.engine._stored(
+            {name: self._rel_from_rows(name, rows)
+             for name, rows in rows_by_name.items()})
+
     def snapshot(self) -> dict[str, np.ndarray]:
         out = {}
         for name in self.compiled.arities:
             key = (name, I.FULL)
             if key in self._env:
-                rel = self._env[key]
-                if name in self.engine.monoid:
-                    out[name] = self.engine.export_monoid(name, rel)
-                else:
-                    out[name] = to_numpy(rel)
+                out[name] = self._snapshot_idb(name)
         return out
 
     # -- internals --------------------------------------------------------------
@@ -271,51 +356,48 @@ class IncrementalEngine:
         self._env = self.engine._run_stratum(env_rels=env, sp=sp,
                                              stats=stats,
                                              stratum_key=f"inc_s{sp.index}")
+        self._stats.iterations[f"inc_s{sp.index}"] = (
+            stats.iterations.get(f"inc_s{sp.index}", 0))
 
-    def _seed(self, sp: I.StratumPlan, changed_rows: dict[str, Relation],
-              env_rels) -> dict[str, Relation]:
-        """Evaluate every rule with one changed-occurrence scan; union by
-        head. Changed IDB inputs from lower strata are handled by passing
-        their full (already updated) relations — the seed only needs the
-        changed EDB occurrences because lower strata were updated first
-        and their deltas folded into CHANGED entries."""
-        lcfg = LowerConfig(self.engine.cfg.intermediate_cap,
-                           self.engine.cfg.semiring,
-                           self.engine.backend,
-                           self.engine.cfg.arrangements)
-        ev = Evaluator(lcfg)
-        # one arrangement scope for the whole seed pass: the stored
-        # fulls are scanned by every retagged rule occurrence, so their
-        # per-key arrangements are built once and shared across all of
-        # them (the Sec. 7 reuse, applied to maintenance)
-        ev.begin_pass()
+    def _seed_roots(self, sp: I.StratumPlan,
+                    changed_names) -> list[tuple[str, I.IR]]:
+        """Retag logic (driver-agnostic pure IR work): every rule with
+        one changed-relation occurrence scanning only the changed rows."""
+        roots: list[tuple[str, I.IR]] = []
+        for p in _unique_rules(sp.plans):
+            plain = _retag_all_full(p.root)
+            for rel_name in sorted(changed_names):
+                occs = _count_occurrences(plain, rel_name)
+                for occ in range(occs):
+                    roots.append(
+                        (p.head, _retag_one_changed(plain, rel_name, occ)))
+        return roots
+
+    def _seed(self, sp: I.StratumPlan, changed_rows: dict,
+              env_rels, restrict=None) -> dict:
+        """Evaluate every rule with one changed-occurrence scan; union
+        by head (driver pass: runs under shard_map when sharded).
+        ``changed_rows`` must already be in stored form. Changed IDB
+        inputs from lower strata are handled by passing their full
+        (already updated) relations — the seed only needs the changed
+        occurrences because lower strata were updated first."""
+        roots = self._seed_roots(sp, set(changed_rows))
+        if not roots:
+            return {}
         rels = dict(env_rels)
         for name, rel in changed_rows.items():
             rels[(name, CHANGED)] = rel
-        env = Env(rels, self.compiled.shared, set(self.engine.monoid))
-        derived: dict[str, list[Relation]] = {}
-        for p in _unique_rules(sp.plans):
-            plain = _retag_all_full(p.root)
-            for rel_name in changed_rows:
-                occs = _count_occurrences(plain, rel_name)
-                for occ in range(occs):
-                    root = _retag_one_changed(plain, rel_name, occ)
-                    out = ev.eval(root, env)
-                    out = self.engine._split_monoid(p.head, out)
-                    derived.setdefault(p.head, []).append(out)
-        seeds: dict[str, Relation] = {}
-        for head, rels_ in derived.items():
-            sr = self.engine._sr_of(head)
-            merged, ov = R.concat_all(
-                rels_, sr, self.engine._idb_cap(head),
-                backend=self.engine.backend)
-            seeds[head] = merged
-        return seeds
+        # the pass structure is fully determined by (stratum, changed
+        # names, restrict heads), so an update stream touching the same
+        # relations re-executes one compiled pass
+        memo_key = (sp.index, "seed", tuple(sorted(changed_rows)),
+                    tuple(sorted(restrict)) if restrict else ())
+        return self.engine.run_rule_pass(rels, roots, restrict=restrict,
+                                         memo_key=memo_key)
 
     def _insert_stratum(self, sp: I.StratumPlan,
                         inserts: dict[str, np.ndarray]) -> None:
-        changed_rel = {name: self._rel_from_rows(name, rows)
-                       for name, rows in inserts.items()}
+        changed_rel = self._stored_from_rows(inserts)
         seeds = self._seed(sp, changed_rel, self._env)
         self._continue_fixpoint(sp, seeds)
 
@@ -325,89 +407,66 @@ class IncrementalEngine:
         #    occurrences until no new candidates (classic DRed phase 1).
         #    The env still holds old IDB fulls; changed EDB fulls are
         #    already new, so reconstruct the old EDB view for the seeds.
-        del_rel = {name: self._rel_from_rows(name, rows)
-                   for name, rows in deletes.items()}
+        del_rel = self._stored_from_rows(deletes)
         old_env = dict(self._env)
         for name, rows in deletes.items():
             # old view = new ∪ deleted (works for EDBs and lower IDBs)
             if name in self.engine.monoid:
                 cur = self.engine.export_monoid(
-                    name, self._env[(name, I.FULL)])
+                    name, self.engine._host_relation(
+                        self._env[(name, I.FULL)]))
             else:
-                cur = to_numpy(self._env[(name, I.FULL)])
+                cur = self._rows(self._env[(name, I.FULL)])
             allrows = np.concatenate([cur, rows]) if len(cur) else rows
-            old_env[(name, I.FULL)] = self._rel_from_rows(name, allrows)
+            old_env[(name, I.FULL)] = self._stored_from_rows(
+                {name: allrows})[name]
 
+        # the "only facts that actually exist can be deleted" filter is
+        # a semijoin against the current fulls, evaluated inside the
+        # pass (shard-local under sharding) — only the small candidate
+        # set ever reaches the host
+        exists = {n: self._env[(n, I.FULL)] for n in sp.idbs}
         candidates: dict[str, set[tuple]] = {n: set() for n in sp.idbs}
         frontier = del_rel
         while frontier:
-            step = self._seed(sp, frontier, old_env)
-            frontier = {}
+            step = self._seed(sp, frontier, old_env, restrict=exists)
+            new_rows: dict[str, np.ndarray] = {}
             for head, rel in step.items():
-                rows = set(map(tuple, to_numpy(rel)))
-                # only facts that actually exist can be deleted
-                exists = set(map(tuple, to_numpy(
-                    self._env[(head, I.FULL)])))
-                new = (rows & exists) - candidates[head]
+                rows = set(map(tuple, self._rows(rel)))
+                new = rows - candidates[head]
                 if new:
                     candidates[head] |= new
-                    frontier[head] = self._rel_from_rows(
-                        head, np.array(sorted(new)))
+                    new_rows[head] = np.array(sorted(new))
+            frontier = self._stored_from_rows(new_rows)
 
-        candidates = {
-            name: self._rel_from_rows(name, np.array(sorted(rows)))
-            for name, rows in candidates.items() if rows}
+        candidates_rel = self._stored_from_rows(
+            {name: np.array(sorted(rows))
+             for name, rows in candidates.items() if rows})
 
-        # 2. remove candidates from stored fulls
-        for name, cand in candidates.items():
-            full = self._env[(name, I.FULL)]
-            reduced, _ = R.difference(full, cand,
-                                      backend=self.engine.backend)
-            self._env[(name, I.FULL)] = reduced
+        # 2. remove candidates from stored fulls (shard-local: both
+        #    sides are home-partitioned by full row)
+        for name, cand in candidates_rel.items():
+            self._env[(name, I.FULL)] = self.engine._difference_stored(
+                self._env[(name, I.FULL)], cand)
 
         # 3. re-derive: run rules against the reduced state; anything still
         #    derivable (incl. candidates with alternate support) comes back
         #    through the standard fixpoint continuation.
-        rederive: dict[str, Relation] = {}
-        lcfg = LowerConfig(self.engine.cfg.intermediate_cap,
-                           self.engine.cfg.semiring,
-                           self.engine.backend,
-                           self.engine.cfg.arrangements)
-        ev = Evaluator(lcfg)
-        ev.begin_pass()
-        env = Env(dict(self._env), self.compiled.shared,
-                  set(self.engine.monoid))
-        for p in _unique_rules(sp.plans):
-            plain = _retag_all_full(p.root)
-            out = ev.eval(plain, env)
-            out = self.engine._split_monoid(p.head, out)
-            sr = self.engine._sr_of(p.head)
-            cand = candidates.get(p.head)
-            if cand is not None:
-                out, _ = R.semijoin(
-                    out, cand, tuple(range(out.arity)),
-                    tuple(range(cand.arity)),
-                    backend=self.engine.backend)
-            if p.head in rederive:
-                merged, _ = R.concat_all(
-                    [rederive[p.head], out], sr,
-                    self.engine._idb_cap(p.head),
-                    backend=self.engine.backend)
-                rederive[p.head] = merged
-            else:
-                rederive[p.head] = out
+        plain_roots = [(p.head, _retag_all_full(p.root))
+                       for p in _unique_rules(sp.plans)]
+        rederive = self.engine.run_rule_pass(
+            dict(self._env), plain_roots, restrict=candidates_rel,
+            memo_key=(sp.index, "rederive",
+                      tuple(sorted(candidates_rel))))
         # 4. insertions seeded on the post-deletion state
         if inserts:
-            ins_rel = {name: self._rel_from_rows(name, rows)
-                       for name, rows in inserts.items()}
+            ins_rel = self._stored_from_rows(inserts)
             ins_seeds = self._seed(sp, ins_rel, self._env)
             for head, rel in ins_seeds.items():
                 if head in rederive:
-                    sr = self.engine._sr_of(head)
-                    rederive[head], _ = R.concat_all(
-                        [rederive[head], rel], sr,
-                        self.engine._idb_cap(head),
-                        backend=self.engine.backend)
+                    rederive[head] = self.engine._union_stored(
+                        [rederive[head], rel], self.engine._sr_of(head),
+                        self.engine._idb_cap(head))
                 else:
                     rederive[head] = rel
         self._continue_fixpoint(sp, rederive)
@@ -415,7 +474,8 @@ class IncrementalEngine:
     def _continue_fixpoint(self, sp: I.StratumPlan,
                            seeds: dict[str, Relation]) -> None:
         """Merge seeds into fulls, then run the stratum's semi-naive loop
-        from (full, seed-delta) to fixpoint."""
+        from (full, seed-delta) to fixpoint — through the driver, so a
+        sharded engine continues shard-local from its stored state."""
         stats = EngineStats()
         env = dict(self._env)
         self._env = self.engine._run_stratum(
@@ -424,7 +484,7 @@ class IncrementalEngine:
             stats=stats, stratum_key=f"inc_s{sp.index}",
             init_state={
                 name: (env.get((name, I.FULL),
-                               self.engine._empty_idb(name)),
+                               self.engine._stored_empty_idb(name)),
                        seeds.get(name))
                 for name in sorted(sp.idbs)})
         self._stats.iterations[f"inc_s{sp.index}"] = (

@@ -206,6 +206,12 @@ class Relation:
                 f"order={self.order})")
 
 
+def pow2_cap(n: int, floor: int = 16) -> int:
+    """Smallest power-of-two capacity holding ``n`` rows with headroom
+    (the engine-wide growth policy for host-built relations)."""
+    return max(floor, int(2 ** np.ceil(np.log2(n + 1))))
+
+
 def empty(cap: int, arity: int, val_identity=None) -> Relation:
     data = jnp.full((cap, arity), PAD, dtype=jnp.int32)
     val = None

@@ -82,7 +82,7 @@ from repro.engine.engine import (
 )
 from repro.engine.lower import Env, Evaluator, LowerConfig
 from repro.engine.relation import (
-    PAD, Relation, from_numpy, live_mask,
+    PAD, Relation, from_numpy, live_mask, pow2_cap,
 )
 from repro.engine.semiring import Semiring
 from repro.launch.mesh import SHARD_AXIS, make_shard_mesh
@@ -346,7 +346,14 @@ class ShardedEngine(Engine):
         """Gather a ShardedRelation back to one host-side Relation.
         Home partitioning keeps rows globally distinct, so this is a
         concat of live blocks + one lexicographic sort — byte-identical
-        to the single-device arrangement."""
+        to the single-device arrangement.
+
+        Capacity is preserved: the gathered relation keeps the per-shard
+        capacity (growing only if the combined rows need more). It used
+        to be recomputed as next-pow2 of the row count, which silently
+        shrank a sparsely-populated relation below its stored ``cap`` —
+        a scatter/gather round trip could then overflow on the next
+        merge (regression-tested in tests/test_sharded.py)."""
         if isinstance(rel, Relation):
             return rel
         data = np.asarray(rel.data)
@@ -358,16 +365,14 @@ class ShardedEngine(Engine):
             v = np.asarray(rel.val)
             vals = np.concatenate(
                 [v[s, :ns[s]] for s in range(rel.num_shards)], axis=0)
-        cap = max(16, int(2 ** np.ceil(np.log2(max(rows.shape[0], 1) + 1))))
+        cap = rel.capacity
+        if rows.shape[0] > cap:
+            cap = pow2_cap(rows.shape[0])
         return from_numpy(rows, cap, val=vals, dedupe=False)
 
     # -- stratum execution ----------------------------------------------------
     def _run_stratum(self, sp: I.StratumPlan, env_rels, stats,
                      stratum_key, init_state=None):
-        if init_state is not None:
-            raise NotImplementedError(
-                "sharded incremental continuation is a ROADMAP follow-up;"
-                " use Engine for incremental maintenance")
         cfg = self.cfg
         lcfg = LowerConfig(cfg.intermediate_cap, cfg.semiring,
                            self.backend, cfg.arrangements)
@@ -375,19 +380,47 @@ class ShardedEngine(Engine):
         monoid_names = set(self.monoid)
         idbs = sorted(sp.idbs)
 
-        init_rels = self._scatter_env(
-            {name: self._ground_relation(sp, name) for name in idbs})
-
         nonrec = [p for p in sp.plans if p.variant == -1]
         rec = [p for p in sp.plans if p.variant >= 0]
 
-        def init_fn(base_g, init_g):
-            base, init = _unstack(base_g), _unstack(init_g)
-            state, ovf = self._stratum_init(
-                base, init, nonrec, idbs, ev, monoid_names)
-            return _restack(state), ovf[None]
+        if init_state is not None:
+            # seeded incremental continuation: the stored fulls are
+            # already home-partitioned ShardedRelations and the seed
+            # deltas arrive in stored form too — the seed merge runs
+            # shard-local under shard_map through the exact same
+            # _stratum_seed body the single-device engine executes
+            # (each shard's block is a valid sorted arrangement, so
+            # merge_with_delta applies unchanged per shard).
+            given = {}
+            for name in idbs:
+                full, seed = init_state[name]
+                if seed is None:
+                    seed = self._stored_empty_idb(name)
+                given[name] = (full, seed)
 
-        state, ovf = self._shmap(init_fn)(dict(env_rels), init_rels)
+            def seed_fn(given_g):
+                state, ovf = self._stratum_seed(
+                    _unstack(given_g), idbs, ev)
+                return _restack(state), ovf[None]
+
+            seed_step = self._memo_jit(
+                ("shard_seed", sp.index),
+                lambda: self._shmap(seed_fn, jit=False))
+            state, ovf = seed_step(given)
+        else:
+            init_rels = self._scatter_env(
+                {name: self._ground_relation(sp, name) for name in idbs})
+
+            def init_fn(base_g, init_g):
+                base, init = _unstack(base_g), _unstack(init_g)
+                state, ovf = self._stratum_init(
+                    base, init, nonrec, idbs, ev, monoid_names)
+                return _restack(state), ovf[None]
+
+            init_step = self._memo_jit(
+                ("shard_init", sp.index),
+                lambda: self._shmap(init_fn, jit=False))
+            state, ovf = init_step(dict(env_rels), init_rels)
         if bool(np.asarray(ovf).any()):
             raise OverflowError_(f"overflow during init of {stratum_key}")
 
@@ -425,8 +458,10 @@ class ShardedEngine(Engine):
                 st, _, ovf, iters = jax.lax.while_loop(cond, body, carry)
                 return _restack(st), ovf[None], iters[None]
 
-            state, ovf, iters = self._shmap(device_fn)(
-                dict(env_rels), state)
+            device_step = self._memo_jit(
+                ("shard_device", sp.index),
+                lambda: self._shmap(device_fn, jit=False))
+            state, ovf, iters = device_step(dict(env_rels), state)
             if bool(np.asarray(ovf).any()):
                 raise OverflowError_(f"overflow in stratum {stratum_key}")
             stratum_iters = int(np.asarray(iters)[0])
@@ -437,7 +472,8 @@ class ShardedEngine(Engine):
                     state, base, rec, idbs, ev, monoid_names)
                 return _restack(ns), ovf[None]
 
-            step = self._shmap(step_fn)
+            step = self._memo_jit(("shard_iter", sp.index),
+                                  lambda: self._shmap(step_fn, jit=False))
             while True:
                 sizes = {n: int(np.asarray(state[n][1].n).sum())
                          for n in idbs}
@@ -468,7 +504,9 @@ class ShardedEngine(Engine):
                 out[name] = merged
             return _restack(out), ovf[None]
 
-        merged, ovf = self._shmap(final_fn)(state)
+        final_step = self._memo_jit(("shard_final", sp.index),
+                                    lambda: self._shmap(final_fn, jit=False))
+        merged, ovf = final_step(state)
         if bool(np.asarray(ovf).any()):
             raise OverflowError_(f"overflow finalizing {stratum_key}")
         full_env = dict(env_rels)
@@ -490,3 +528,78 @@ class ShardedEngine(Engine):
         return repartition_rows(
             data, val, live, tuple(range(data.shape[1])), sr, cap,
             self.num_shards, backend=self.backend)
+
+    # -- maintenance driver hooks (incremental.py runs through these) ---------
+    def _maintenance_evaluator(self):
+        return ShardedEvaluator(
+            LowerConfig(self.cfg.intermediate_cap, self.cfg.semiring,
+                        self.backend, self.cfg.arrangements),
+            self.num_shards)
+
+    def run_rule_pass(self, env_rels, roots, restrict=None,
+                      memo_key=None) -> dict:
+        """Sharded maintenance pass: the shared ``_rule_pass_body``
+        runs inside shard_map with the key-partitioned evaluator, so
+        every retagged rule occurrence repartitions its operands on the
+        operation key exactly like the batch fixpoint, and
+        ``_merge_head`` re-homes derived rows before the per-head
+        union. Inputs must already be in stored (sharded) form — see
+        ``_stored``. ``memo_key`` (structure of the pass) enables the
+        same cross-update trace reuse as the single-device driver."""
+        ev = self._maintenance_evaluator()
+        restrict = dict(restrict or {})
+
+        def pass_fn(rels_g, restrict_g):
+            derived, ovf = self._rule_pass_body(
+                _unstack(rels_g), roots, _unstack(restrict_g), ev)
+            return _restack(derived), ovf[None]
+
+        if memo_key is None:
+            step = self._shmap(pass_fn)
+        else:
+            step = self._memo_jit(("rule_pass",) + tuple(memo_key),
+                                  lambda: self._shmap(pass_fn, jit=False))
+        derived, ovf = step(dict(env_rels), restrict)
+        if bool(np.asarray(ovf).any()):
+            raise OverflowError_("overflow in incremental rule pass")
+        return derived
+
+    def _stored(self, rels: dict) -> dict:
+        """Scatter host-built Relations to their home shards; entries
+        already in sharded form pass through unchanged."""
+        host = {k: v for k, v in rels.items()
+                if not isinstance(v, ShardedRelation)}
+        scattered = self._scatter_env(host) if host else {}
+        return {k: scattered.get(k, rels[k]) for k in rels}
+
+    def _stored_empty_idb(self, name: str) -> ShardedRelation:
+        e = self._empty_idb(name)
+        s = self.num_shards
+        return ShardedRelation(
+            jnp.tile(e.data[None], (s, 1, 1)),
+            jnp.tile(e.val[None], (s, 1)) if e.val is not None else None,
+            jnp.zeros((s,), jnp.int32))
+
+    def _difference_stored(self, rel, sub):
+        """Shard-local set difference: both operands are home-partitioned
+        by full-row hash, so equal rows co-locate and no repartition is
+        needed (the DRed candidate-removal step)."""
+        def diff_fn(pair_g):
+            a, b = _unstack(pair_g)
+            out, _ = R.difference(a, b, backend=self.backend)
+            return _to_global(out)
+
+        return self._shmap(diff_fn)((rel, sub))
+
+    def _union_stored(self, rels: list, sr: Semiring, cap: int):
+        """Shard-local union of home-partitioned relations (duplicates
+        co-locate, so concat + dedupe needs no communication)."""
+        def union_fn(rels_g):
+            out, ov = R.concat_all(_unstack(rels_g), sr, cap,
+                                   backend=self.backend)
+            return _to_global(out), ov[None]
+
+        out, ov = self._shmap(union_fn)(list(rels))
+        if bool(np.asarray(ov).any()):
+            raise OverflowError_("overflow combining maintenance seeds")
+        return out

@@ -138,6 +138,48 @@ def test_stratum_pruning(rng):
     assert (0, 7) in set(map(tuple, out["b"]))
 
 
+def test_negation_updates_recompute():
+    """Changes to a relation consumed in a NEGATED position act
+    inverted on the head (deleting a negated fact ADDS head facts,
+    inserting one RETRACTS them) — monotone seeds cannot express
+    either, so such strata must take the recompute fallback.
+    Regression: seeded maintenance used to leave `unreach` stale in
+    both directions."""
+    from repro.engine import Engine
+    from benchmarks.programs import UNREACH
+
+    cp = compile_program(UNREACH)
+    inc = IncrementalEngine(cp, cfg())
+    src = np.array([[0]])
+    inc.initialize({"edge": np.array([[0, 1], [1, 2], [2, 3], [9, 2]]),
+                    "source": src})
+
+    def ref():
+        batch, _ = Engine(cp, cfg()).run(
+            {"edge": np.array(sorted(inc.edbs["edge"])), "source": src})
+        return set(map(tuple, batch["unreach"]))
+
+    # delete edge (1,2): nodes 2 and 3 become unreachable — unreach GROWS
+    out = inc.apply(deletes={"edge": np.array([[1, 2]])})
+    assert set(map(tuple, out["unreach"])) == ref()
+    # insert edge (0,9): node 9 (and 2, 3 via 9->2) become reachable —
+    # unreach SHRINKS
+    out = inc.apply(inserts={"edge": np.array([[0, 9]])})
+    assert set(map(tuple, out["unreach"])) == ref()
+
+
+def test_empty_update_batches():
+    """Zero-row insert/delete batches are legal no-ops (the update-
+    stream harness interleaves them)."""
+    cp = compile_program(TC_SRC)
+    inc = IncrementalEngine(cp, cfg())
+    inc.initialize({"edge": np.array([[1, 2], [2, 3]])})
+    before = set(map(tuple, inc.snapshot()["tc"]))
+    out = inc.apply(inserts={"edge": np.zeros((0, 2), int)},
+                    deletes={"edge": np.zeros((0, 2), int)})
+    assert set(map(tuple, out["tc"])) == before
+
+
 def test_incremental_matches_batch_randomized(rng):
     """Property: after any update sequence, incremental state == batch
     re-evaluation from scratch."""
