@@ -7,11 +7,26 @@
 #   test         — the full tier-1 command from ROADMAP.md (~4.5 min)
 PYTEST = PYTHONPATH=src python -m pytest
 
-.PHONY: test test-fast test-sharded bench-backends bench-sharding \
-	bench-wide bench-arrange bench-incremental bench-smoke
+.PHONY: test test-fast test-sharded lint lint-ir bench-backends \
+	bench-sharding bench-wide bench-arrange bench-incremental \
+	bench-smoke
 
 test:
 	$(PYTEST) -x -q
+
+# ruff lint (pyproject.toml [tool.ruff]); skipped with a notice when
+# ruff is absent locally — CI installs it and fails properly
+lint:
+	@if command -v ruff >/dev/null 2>&1; then \
+		ruff check src benchmarks tests; \
+	else \
+		echo "ruff not installed; skipping lint (CI runs it)"; \
+	fi
+
+# static IR lint: compile the shared benchmark corpus, run the
+# core.analysis verifier + worst-case bounds, exit nonzero on violations
+lint-ir:
+	PYTHONPATH=src python -m repro.analysis --corpus
 
 test-fast:
 	$(PYTEST) -x -q -m "not slow"
@@ -19,7 +34,8 @@ test-fast:
 test-sharded:
 	XLA_FLAGS="--xla_force_host_platform_device_count=8" \
 		$(PYTEST) -x -q tests/test_sharded.py tests/test_wide.py \
-		tests/test_arrange.py tests/test_update_streams.py
+		tests/test_arrange.py tests/test_update_streams.py \
+		tests/test_analysis.py
 
 bench-backends:
 	PYTHONPATH=src python -m benchmarks.run --only backends

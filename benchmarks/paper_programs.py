@@ -4,7 +4,6 @@ no-opt (the paper's DDlog-like baseline: 'FlowLog (no opt.) can be
 regarded as a memory-optimized variant of DDlog', Sec. 10.4)."""
 from __future__ import annotations
 
-import time
 
 import numpy as np
 

@@ -4,14 +4,21 @@ For rules with recursive multiway joins we enumerate listing-order
 variants (like the paper's 91 variants) and run four optimizer settings:
 plan+sip / plan only / sip only / no-opt. The paper's claim: plan+sip
 never blows up; fixed listing orders do. Our blow-up proxy on fixed
-capacities is the auto-grow retry count + wall time."""
+capacities is the auto-grow retry count + wall time.
+
+The static worst-case analyzer (core/analysis/bounds.py) rides along:
+every compiled variant is analyzed against the measured relation sizes,
+its peak intermediate bound and blow-up flags are recorded per row, and
+the run *asserts* the analyzer's two claims — the optimized plan's
+bound never exceeds any fixed-order variant's, and every variant that
+actually grew capacity or failed at runtime was flagged statically."""
 from __future__ import annotations
 
-import itertools
 import time
 
 import numpy as np
 
+from repro.core.analysis import analyze_program
 from repro.core.optimizer import CompileOptions, compile_program
 from repro.engine import Engine, EngineConfig
 
@@ -67,50 +74,113 @@ def _run(src, edbs, opts, cap=1 << 14, inter=1 << 16):
     out, stats = eng.run(edbs)
     wall = time.perf_counter() - t0
     grows = int(np.log2(eng.cfg.intermediate_cap // grow0))
-    return wall, grows, stats
+    return wall, grows, out, stats
 
 
-def bench() -> list[dict]:
+# flag threshold for the static analyzer: variants whose peak
+# intermediate bound exceeds their output bound by this factor are
+# reported as blow-up risks (calibrated on the families below: the
+# p-join-p-first galen_r3 listing is flagged, the c-first ones are not)
+FLAG_FACTOR = 8.0
+
+# known-bad listing orders per rule family (index into *_BODIES): the
+# galen_r3 order that joins the two recursive p atoms before the small
+# c relation — the analyzer must flag exactly these under fixed orders
+BAD_ORDERS = {"galen_r3": {2}}
+
+# slack (log2) for comparing the optimized plan's bound against fixed
+# orders: the planner optimizes its own cost model, not this bound, so
+# allow a sub-factor-2 wobble — blow-ups are orders of magnitude
+BOUND_SLACK = 0.5
+
+
+def _measure_sizes(src, edbs) -> dict[str, int]:
+    """Relation sizes the analyzer is evaluated against: EDB row counts
+    plus actual fixpoint sizes from one optimized reference run."""
+    sizes = {k: len(v) for k, v in edbs.items()}
+    _, _, out, _ = _run(src, edbs, SETTINGS["plan+sip"])
+    sizes.update({k: max(len(v), 1) for k, v in out.items()})
+    return sizes
+
+
+def _bench_rule(rule, template, bodies, edbs, rows):
+    sizes = _measure_sizes(template.format(body=bodies[0]), edbs)
+    for i, body in enumerate(bodies):
+        src = template.format(body=body)
+        row = {"table": "robustness", "rule": rule, "order": i}
+        for label, opts in SETTINGS.items():
+            rep = analyze_program(compile_program(src, opts), sizes,
+                                  flag_factor=FLAG_FACTOR)
+            row[f"{label}_bound"] = round(rep.log2_peak, 2)
+            row[f"{label}_flagged"] = len(rep.flagged)
+            try:
+                wall, grows, _, _ = _run(src, edbs, opts)
+                row[f"{label}_s"] = round(wall, 3)
+                row[f"{label}_grows"] = grows
+            except Exception as e:  # noqa: BLE001
+                row[f"{label}_s"] = None
+                row[f"{label}_err"] = repr(e)[:60]
+        rows.append(row)
+
+
+def check_analyzer_claims(rows: list[dict]) -> None:
+    """The static-analysis claims the study asserts, per variant:
+
+    1. the optimized plan's worst-case bound never exceeds any fixed
+       order's (within BOUND_SLACK);
+    2. any variant that grew capacity / failed at runtime was
+       statically flagged;
+    3. the analyzer discriminates the known-bad listing orders
+       (BAD_ORDERS) from the known-good ones under fixed settings."""
+    opt = "plan+sip"
+    for row in rows:
+        if row.get("table") != "robustness":
+            continue
+        loc = f"{row['rule']} order {row['order']}"
+        for label in SETTINGS:
+            assert row[f"{opt}_bound"] <= \
+                row[f"{label}_bound"] + BOUND_SLACK, \
+                (f"{loc}: optimized bound 2^{row[f'{opt}_bound']} above "
+                 f"{label}'s 2^{row[f'{label}_bound']}")
+            blew_up = (row.get(f"{label}_s") is None
+                       or row.get(f"{label}_grows", 0) > 0)
+            if blew_up:
+                assert row[f"{label}_flagged"] > 0, \
+                    (f"{loc}: {label} grew/failed at runtime but the "
+                     f"analyzer did not flag it")
+        bad = BAD_ORDERS.get(row["rule"], set())
+        if row["order"] in bad:
+            assert row["noopt_flagged"] > 0, \
+                f"{loc}: known-bad listing order not flagged"
+        elif row["rule"] in BAD_ORDERS:
+            assert row["noopt_flagged"] == 0, \
+                f"{loc}: known-good listing order spuriously flagged"
+
+
+def bench(smoke: bool = False) -> list[dict]:
     rng = np.random.default_rng(3)
-    rows = []
+    rows: list[dict] = []
 
+    # dense e -> a large recursive p; small c: the p-before-c listing
+    # order pays a p*p intermediate the analyzer can see statically
+    nodes = 30 if smoke else 50
     tri_edbs = {
-        "c": rng.integers(0, 40, size=(120, 3)),
-        "e": rng.integers(0, 40, size=(90, 2)),
+        "c": rng.integers(0, nodes, size=(25 if smoke else 60, 3)),
+        "e": rng.integers(0, nodes, size=(250 if smoke else 600, 2)),
     }
-    for i, body in enumerate(TRI_BODIES):
-        src = TRI_TEMPLATE.format(body=body)
-        row = {"table": "robustness", "rule": "galen_r3",
-               "order": i}
-        for label, opts in SETTINGS.items():
-            try:
-                wall, grows, _ = _run(src, tri_edbs, opts)
-                row[f"{label}_s"] = round(wall, 3)
-                row[f"{label}_grows"] = grows
-            except Exception as e:  # noqa: BLE001
-                row[f"{label}_s"] = None
-                row[f"{label}_err"] = repr(e)[:60]
-        rows.append(row)
+    _bench_rule("galen_r3", TRI_TEMPLATE, TRI_BODIES, tri_edbs, rows)
 
-    chain_edbs = {
-        "r0": rng.integers(0, 60, size=(150, 2)),
-        "s": rng.integers(0, 60, size=(150, 2)),
-        "t": rng.integers(0, 60, size=(150, 2)),
-        "u": rng.integers(0, 60, size=(150, 2)),
-    }
-    for i, body in enumerate(CHAIN_BODIES):
-        src = CHAIN_TEMPLATE.format(body=body)
-        row = {"table": "robustness", "rule": "cyclic_4way",
-               "order": i}
-        for label, opts in SETTINGS.items():
-            try:
-                wall, grows, _ = _run(src, chain_edbs, opts)
-                row[f"{label}_s"] = round(wall, 3)
-                row[f"{label}_grows"] = grows
-            except Exception as e:  # noqa: BLE001
-                row[f"{label}_s"] = None
-                row[f"{label}_err"] = repr(e)[:60]
-        rows.append(row)
+    if not smoke:
+        chain_edbs = {
+            "r0": rng.integers(0, 60, size=(150, 2)),
+            "s": rng.integers(0, 60, size=(150, 2)),
+            "t": rng.integers(0, 60, size=(150, 2)),
+            "u": rng.integers(0, 60, size=(150, 2)),
+        }
+        _bench_rule("cyclic_4way", CHAIN_TEMPLATE, CHAIN_BODIES,
+                    chain_edbs, rows)
+
+    check_analyzer_claims(rows)
     return rows
 
 
@@ -122,6 +192,9 @@ def summarize(rows: list[dict]) -> list[dict]:
         grows = [r.get(f"{setting}_grows", 0) for r in rows
                  if r.get(f"{setting}_s") is not None]
         fails = sum(1 for r in rows if r.get(f"{setting}_s") is None)
+        bounds = [r[f"{setting}_bound"] for r in rows
+                  if r.get(f"{setting}_bound") is not None]
+        flagged = sum(r.get(f"{setting}_flagged", 0) for r in rows)
         out.append({
             "table": "robustness_summary",
             "setting": setting,
@@ -130,5 +203,7 @@ def summarize(rows: list[dict]) -> list[dict]:
             "capacity_grows_total": int(sum(grows)),
             "failures": fails,
             "n_orders": len(rows),
+            "max_log2_bound": round(max(bounds), 2) if bounds else None,
+            "flagged_total": int(flagged),
         })
     return out

@@ -17,7 +17,7 @@ ALL_TABLES = ("table1", "seminaive", "robustness", "specialization",
 
 # the cheap tables --smoke runs by default (CI bitrot guard: the bench
 # harness executes end-to-end on every push, in seconds)
-SMOKE_TABLES = ("arrange", "incremental")
+SMOKE_TABLES = ("arrange", "incremental", "robustness")
 
 
 def collect(only=None, smoke: bool = False) -> list[dict]:
@@ -31,7 +31,7 @@ def collect(only=None, smoke: bool = False) -> list[dict]:
         rows += bench_seminaive_vs_naive()
     if "robustness" in only:
         from benchmarks.robustness import bench, summarize
-        r = bench()
+        r = bench(smoke=smoke)
         rows += r + summarize(r)
     if "specialization" in only:
         from benchmarks.specialization import bench

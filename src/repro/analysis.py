@@ -1,0 +1,101 @@
+"""``python -m repro.analysis`` — static IR lint for Datalog programs.
+
+Compiles a program (or the shared benchmark corpus), prints the
+``core.analysis`` verifier report and per-rule worst-case bounds, and
+exits nonzero on any verifier violation. Wired as ``make lint-ir``; the
+CI ``analyze`` step runs it over ``benchmarks/programs`` +
+``benchmarks/paper_programs`` datasets.
+
+Usage::
+
+    python -m repro.analysis path/to/program.dl     # one source file
+    python -m repro.analysis --corpus               # shared benchmark corpus
+    python -m repro.analysis --corpus --no-planner  # lint a listing-order plan
+
+The verifier runs *inside* ``compile_program`` after each optimizer
+pass (``CompileOptions.verify``), so a malformed-IR-emitting pass is
+named even before the final whole-program report printed here.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.core.analysis import analyze_program, verify_program
+from repro.core.optimizer.pipeline import CompileOptions, compile_program
+
+
+def _lint_one(name: str, src: str, sizes: dict[str, int] | None,
+              options: CompileOptions) -> int:
+    """Compile + verify + bound one program; returns violation count."""
+    try:
+        compiled = compile_program(src, options)
+    except Exception as e:
+        print(f"== {name}: COMPILE FAILED ==")
+        print(f"  {e}")
+        return 1
+    diags = verify_program(compiled, pass_name="final")
+    report = analyze_program(compiled, sizes)
+    status = "FAIL" if diags else "ok"
+    print(f"== {name}: {status} "
+          f"({len(diags)} violation(s), "
+          f"{len(report.rules)} rule plan(s), "
+          f"peak bound 2^{report.log2_peak:.1f}) ==")
+    for d in diags:
+        print(f"  VIOLATION: {d}")
+    print(report.pretty())
+    return len(diags)
+
+
+def _corpus(options: CompileOptions):
+    """The shared benchmark corpus: equivalence datasets + the Table-1
+    paper programs (smallest scale — only sizes matter here)."""
+    from benchmarks.programs import equivalence_datasets, make_datasets
+
+    for name, (src, edbs) in equivalence_datasets().items():
+        yield name, src, {k: len(v) for k, v in edbs.items()}
+    for name, (src, edbs, _out) in make_datasets(0.25).items():
+        yield f"paper:{name}", src, {k: len(v) for k, v in edbs.items()}
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Static IR verifier + worst-case plan analyzer")
+    ap.add_argument("program", nargs="?",
+                    help="Datalog source file to lint")
+    ap.add_argument("--corpus", action="store_true",
+                    help="lint the shared benchmark corpus instead")
+    ap.add_argument("--no-planner", action="store_true",
+                    help="use listing order instead of the structural "
+                         "planner")
+    ap.add_argument("--no-sip", action="store_true",
+                    help="disable sip semijoin reduction")
+    ap.add_argument("--default-size", type=int, default=1000,
+                    help="assumed row count for relations without data "
+                         "(default 1000)")
+    args = ap.parse_args(argv)
+
+    options = CompileOptions(use_planner=not args.no_planner,
+                             use_sip=not args.no_sip)
+    # the final whole-program report below is THE check; per-pass
+    # raising inside compile_program would hide the printed report
+    options.verify = False
+
+    violations = 0
+    if args.corpus:
+        for name, src, sizes in _corpus(options):
+            violations += _lint_one(name, src, sizes, options)
+    elif args.program:
+        with open(args.program) as f:
+            src = f.read()
+        violations += _lint_one(args.program, src, None, options)
+    else:
+        ap.error("give a program file or --corpus")
+    print(f"\n{'FAILED' if violations else 'clean'}: "
+          f"{violations} violation(s) total")
+    return 1 if violations else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -15,16 +15,15 @@ An ArchSpec provides, per named input shape:
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from functools import partial
-from typing import Callable, Optional
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.models import transformer as T
-from repro.models.moe import MoEConfig
 from repro.training.optim import AdamWConfig, TrainState, adamw_update
 
 
@@ -484,7 +483,6 @@ class RecsysArch:
         return RECSYS_SHAPES
 
     def input_specs(self, shape_name: str, smoke: bool = False):
-        from repro.models.recsys.fm import FMConfig
         cfg = self.smoke_cfg if smoke else self.cfg
         sh = self.shapes[shape_name]
         s = dict(sh.sizes)

@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import itertools
 from dataclasses import dataclass, field
-from typing import Iterable, Optional, Union
+from typing import Union
 
 _wildcard_counter = itertools.count()
 

@@ -9,7 +9,7 @@ flags, which drive semi-naive delta-variant generation in the engine.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 from repro.core.datalog.ast import Program, Rule
 

@@ -14,7 +14,6 @@ sort/compaction passes that come with them.
 """
 from __future__ import annotations
 
-from dataclasses import replace
 
 from repro.core import ir as I
 

@@ -9,18 +9,26 @@ position), before sharing, so common subtrees across variants are shared.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 from repro.core import ir as I
 from repro.core.datalog.ast import (
     Aggregate, Atom, BinExpr, Comparison, Const, Program, Rule, Var,
 )
 from repro.core.datalog.parser import parse_program
-from repro.core.datalog.stratify import Stratum, stratify
+from repro.core.datalog.stratify import stratify
+from repro.core.analysis.verify import (
+    verify_ir_or_raise, verify_program_or_raise,
+)
 from repro.core.optimizer import joingraph as JG
 from repro.core.optimizer import sip as SIP
 from repro.core.optimizer.fusion import fuse
 from repro.core.optimizer.sharing import share_subplans
+
+# Test harness hook (tests/conftest.py): when True, the IR verifier runs
+# after every optimizer pass even for compiles that pass verify=False.
+# Deliberately-malformed tests opt out via @pytest.mark.no_ir_verify.
+FORCE_VERIFY = False
 
 
 @dataclass
@@ -31,6 +39,11 @@ class CompileOptions:
     use_sharing: bool = True      # Sec. 7 subplan sharing
     sip_min_atoms: int = 3
     max_spanning_trees: int = 2000
+    verify: bool = True           # core.analysis IR verifier after each pass
+
+    @property
+    def verify_on(self) -> bool:
+        return self.verify or FORCE_VERIFY
 
 
 class LoweringError(ValueError):
@@ -244,6 +257,10 @@ def lower_rule(
     if options.use_sip and graph.n >= options.sip_min_atoms:
         schedule = SIP.plan_sip(graph, start=0)
         leaf_irs = SIP.apply_sip(leaf_irs, schedule)
+        if options.verify_on:
+            for i, leaf in enumerate(leaf_irs):
+                verify_ir_or_raise(
+                    leaf, where=f"leaf {i} of {rule}", pass_name="sip")
 
     # -- rooted JST composition (Sec. 5)
     if options.use_planner:
@@ -366,8 +383,17 @@ def compile_program(
             for var_idx, versions in variants:
                 root, is_monoid = lower_rule(
                     rule, st.idbs, versions, options)
+                if options.verify_on:
+                    verify_ir_or_raise(
+                        root, where=f"{rule} [variant {var_idx}]",
+                        pass_name="planning" if options.use_planner
+                        else "listing")
                 if options.use_fusion:
                     root = fuse(root)
+                    if options.verify_on:
+                        verify_ir_or_raise(
+                            root, where=f"{rule} [variant {var_idx}]",
+                            pass_name="fusion")
                 if is_monoid:
                     agg = rule.aggregates[0]
                     vpos = next(
@@ -414,7 +440,7 @@ def compile_program(
         for p, r in zip(plans_all, new_roots):
             object.__setattr__(p, "root", r)
 
-    return I.CompiledProgram(
+    compiled = I.CompiledProgram(
         strata=stratum_plans,
         arities=arities,
         edbs=set(program.edbs),
@@ -422,3 +448,10 @@ def compile_program(
         shared=shared,
         monoid_idbs=monoid_idbs,
     )
+    if options.verify_on:
+        # whole-program pass: SharedRef discipline, stratified negation,
+        # head arities, stored-arity ceiling — named for the last pass
+        # that rewrote the plans
+        verify_program_or_raise(
+            compiled, "sharing" if options.use_sharing else "lowering")
+    return compiled

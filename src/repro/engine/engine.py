@@ -20,7 +20,6 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from functools import partial
 from typing import Optional
 
 import jax
@@ -32,11 +31,11 @@ from repro.engine import relops as R
 from repro.engine.backend import KernelDispatch, resolve_backend
 from repro.engine.lower import Env, Evaluator, LowerConfig
 from repro.engine.relation import (
-    PAD, Relation, UNSORTED, empty, from_numpy, live_mask, pow2_cap,
+    Relation, UNSORTED, empty, from_numpy, live_mask, pow2_cap,
     to_numpy, to_numpy_with_val,
 )
 from repro.engine.semiring import (
-    COUNTING, PRESENCE, Semiring, monoid_for,
+    PRESENCE, Semiring, monoid_for,
 )
 
 
@@ -70,6 +69,12 @@ class EngineConfig:
     # axis is named "shards" (defaults to launch.mesh.make_shard_mesh).
     shards: int = 0
     shard_mesh: object = None
+    # runtime arrangement sanitizer (core/analysis/sanitize.py): pull
+    # every stored relation to the host at each stratum boundary (and
+    # after incremental apply) and validate the relation.py arrangement
+    # contract — sort-order witnesses vs actual data, PAD tails,
+    # distinctness, shard homing. Debug-only: O(rows) host transfers.
+    check_invariants: bool = False
 
 
 @dataclass
@@ -396,6 +401,18 @@ class Engine:
             raise OverflowError_("overflow combining maintenance seeds")
         return out
 
+    # -- runtime invariant sanitizer (core/analysis/sanitize.py) ---------------
+    _sanitize_layer = "engine"
+
+    def _sanitize_env(self, env, where: str) -> None:
+        """Validate every stored arrangement against device data when
+        cfg.check_invariants is set (lazy import: sanitize is layered
+        above the engine)."""
+        if not self.cfg.check_invariants:
+            return
+        from repro.core.analysis.sanitize import sanitize_env
+        sanitize_env(self, env, where, self._sanitize_layer)
+
     # -- stratum execution ----------------------------------------------------
     def _run_stratum(self, sp: I.StratumPlan, env_rels, stats,
                      stratum_key, init_state=None):
@@ -441,6 +458,7 @@ class Engine:
             for name in idbs:
                 full_env[(name, I.FULL)] = state[name][0]
             stats.iterations[stratum_key] = 0
+            self._sanitize_env(full_env, f"stratum {stratum_key} boundary")
             return full_env
 
         # -- one semi-naive iteration
@@ -506,6 +524,7 @@ class Engine:
             full_env[(name, I.FULL)] = merged
         stats.iterations[stratum_key] = stratum_iters
         stats.delta_sizes[stratum_key] = delta_log
+        self._sanitize_env(full_env, f"stratum {stratum_key} boundary")
         return full_env
 
     # -- public ---------------------------------------------------------------

@@ -305,6 +305,14 @@ class IncrementalEngine:
                     ins_changes[n] = np.array(added)
                 if removed:
                     del_changes[n] = np.array(removed)
+        # maintained arrangements must satisfy the same contract a batch
+        # run would leave behind (core/analysis/sanitize.py); the
+        # recompute/fixpoint paths were checked per-stratum already —
+        # this covers the seed-merge and DRed update paths
+        if self.engine.cfg.check_invariants:
+            from repro.core.analysis.sanitize import sanitize_env
+            sanitize_env(self.engine, self._env, "incremental apply",
+                         "incremental")
         return self.snapshot()
 
     def _rows(self, rel) -> np.ndarray:

@@ -147,6 +147,30 @@ def counters_snapshot() -> dict:
     return dict(COUNTERS)
 
 
+@contextlib.contextmanager
+def counter_scope():
+    """Explicitly scoped counter window: yields a dict that, on exit,
+    holds exactly the counts accumulated *inside* the block, while the
+    global COUNTERS keep accumulating across the block (outer scopes
+    still see totals).
+
+    This is the supported way to attribute launch counts to one config
+    (benchmarks/arrange.py): the global reset_counters/counters_snapshot
+    pair is mutated from trace-time callsites across *all* live engines,
+    so interleaved resets cross-contaminate measurements. COUNTERS is
+    mutated in place — relops holds a direct reference."""
+    before = dict(COUNTERS)
+    for k in COUNTERS:
+        COUNTERS[k] = 0
+    window: dict = {}
+    try:
+        yield window
+    finally:
+        window.update(COUNTERS)
+        for k in COUNTERS:
+            COUNTERS[k] += before[k]
+
+
 @jax.tree_util.register_pytree_node_class
 class Relation:
     """See module docstring. ``order`` is the static sort-order witness;

@@ -40,7 +40,6 @@ Correspondence to DD operators (paper Sec. 2.3):
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Optional, Sequence
 
 import jax

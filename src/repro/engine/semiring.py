@@ -24,7 +24,6 @@ In the executor, lift happens implicitly: membership tests materialize
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
 from typing import Callable, Optional
 
 import jax.numpy as jnp

@@ -80,7 +80,7 @@ from repro.engine import relops as R
 from repro.engine.engine import (
     Engine, EngineConfig, OverflowError_,
 )
-from repro.engine.lower import Env, Evaluator, LowerConfig
+from repro.engine.lower import Evaluator, LowerConfig
 from repro.engine.relation import (
     PAD, Relation, from_numpy, live_mask, pow2_cap,
 )
@@ -292,6 +292,8 @@ class ShardedEngine(Engine):
     via ``EngineConfig.shards >= 2`` (see ``repro.engine.make_engine``);
     composes with any ``kernel_backend``."""
 
+    _sanitize_layer = "shard"
+
     def __init__(self, compiled: I.CompiledProgram,
                  config: EngineConfig | None = None):
         super().__init__(compiled, config)
@@ -429,6 +431,7 @@ class ShardedEngine(Engine):
             for name in idbs:
                 full_env[(name, I.FULL)] = state[name][0]
             stats.iterations[stratum_key] = 0
+            self._sanitize_env(full_env, f"stratum {stratum_key} boundary")
             return full_env
 
         stratum_iters = 0
@@ -514,6 +517,7 @@ class ShardedEngine(Engine):
             full_env[(name, I.FULL)] = merged[name]
         stats.iterations[stratum_key] = stratum_iters
         stats.delta_sizes[stratum_key] = delta_log
+        self._sanitize_env(full_env, f"stratum {stratum_key} boundary")
         return full_env
 
     # -- head merge: re-home derived rows before combining --------------------

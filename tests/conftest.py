@@ -7,6 +7,25 @@ def rng():
     return np.random.default_rng(0)
 
 
+@pytest.fixture(autouse=True)
+def _force_ir_verify(request):
+    """Run the core.analysis IR verifier after every optimizer pass for
+    every compile in the test suite — even compiles that opt out with
+    CompileOptions(verify=False). Deliberately-malformed compiles mark
+    themselves ``@pytest.mark.no_ir_verify`` (see pytest.ini)."""
+    from repro.core.optimizer import pipeline
+
+    if request.node.get_closest_marker("no_ir_verify"):
+        yield
+        return
+    prev = pipeline.FORCE_VERIFY
+    pipeline.FORCE_VERIFY = True
+    try:
+        yield
+    finally:
+        pipeline.FORCE_VERIFY = prev
+
+
 def tc_oracle(edges) -> set:
     """Pure-python transitive closure oracle."""
     tc = set(map(tuple, edges))

@@ -30,8 +30,8 @@ from repro.engine import relops as R
 from repro.engine.backend import JnpDispatch, PallasDispatch
 from repro.engine.incremental import IncrementalEngine
 from repro.engine.relation import (
-    COUNTERS, Relation, UNSORTED, empty, force_multiword,
-    from_numpy, reset_counters, to_numpy,
+    Relation, UNSORTED, counter_scope, empty, force_multiword,
+    from_numpy, to_numpy,
 )
 from repro.engine.semiring import COUNTING, MIN_MONOID, PRESENCE
 
@@ -66,12 +66,12 @@ def test_arrange_fastpath_skips_sort():
     """key_cols already the identity prefix: arrange is the identity —
     same object, no sort launch."""
     r = from_numpy(np.array([[3, 1], [1, 2], [2, 9]]), 8)
-    reset_counters()
-    assert R.arrange(r, (0,)) is r
-    assert R.arrange(r, (0, 1)) is r
-    assert R.arrange(r, ()) is r
-    assert COUNTERS["sorts"] == 0
-    assert COUNTERS["cache_fastpath"] == 3
+    with counter_scope() as c:
+        assert R.arrange(r, (0,)) is r
+        assert R.arrange(r, (0, 1)) is r
+        assert R.arrange(r, ()) is r
+    assert c["sorts"] == 0
+    assert c["cache_fastpath"] == 3
 
 
 def test_arrange_records_witness_and_reuses_it():
@@ -81,10 +81,10 @@ def test_arrange_records_witness_and_reuses_it():
     col1 = to_numpy(a)[:, 1].tolist()
     assert col1 == sorted(col1)
     # compatible follow-up arranges ride the recorded witness
-    reset_counters()
-    assert R.arrange(a, (1,)) is a
-    assert R.arrange(a, (1, 0)) is a
-    assert COUNTERS["sorts"] == 0
+    with counter_scope() as c:
+        assert R.arrange(a, (1,)) is a
+        assert R.arrange(a, (1, 0)) is a
+    assert c["sorts"] == 0
 
 
 def test_unsorted_witness_disables_fastpaths():
@@ -267,9 +267,9 @@ def test_merge_falls_back_on_non_identity_witness():
     full = from_numpy(np.array([[0, 9], [1, 1], [2, 5]]), 16)
     arranged = R.arrange(full, (1,))
     delta = from_numpy(np.array([[7, 0]]), 8)
-    reset_counters()
-    got = R.merge(arranged, delta, PRESENCE, 32)
-    assert COUNTERS["merge_sorted"] == 0 and COUNTERS["sorts"] >= 1
+    with counter_scope() as c:
+        got = R.merge(arranged, delta, PRESENCE, 32)
+    assert c["merge_sorted"] == 0 and c["sorts"] >= 1
     want = R.merge(full, delta, PRESENCE, 32)
     np.testing.assert_array_equal(np.asarray(got[0].data),
                                   np.asarray(want[0].data))
@@ -323,12 +323,10 @@ def test_fixpoint_fewer_sorts_with_arrangements():
     fixpoint contains strictly fewer sort launches and at least one
     rank-merge maintenance step."""
     src, edbs = _datasets()["TC"]
-    reset_counters()
-    Engine(compile_program(src), _cfg(True)).run(dict(edbs))
-    on = dict(COUNTERS)
-    reset_counters()
-    Engine(compile_program(src), _cfg(False)).run(dict(edbs))
-    off = dict(COUNTERS)
+    with counter_scope() as on:
+        Engine(compile_program(src), _cfg(True)).run(dict(edbs))
+    with counter_scope() as off:
+        Engine(compile_program(src), _cfg(False)).run(dict(edbs))
     assert on["merge_sorted"] > 0
     assert on["sorts"] < off["sorts"]
 

@@ -2,7 +2,7 @@
 import pytest
 
 from repro.core.datalog import parse_program, parse_rule, stratify
-from repro.core.datalog.ast import Aggregate, BinExpr, Const, Var
+from repro.core.datalog.ast import BinExpr, Const
 
 
 def test_parse_basic_program():

@@ -3,7 +3,6 @@ translation), permutation invariance of aggregation, DimeNet triplet
 correctness (the relational self-join), GNN-vs-engine aggregation
 equivalence (DESIGN.md §4)."""
 import numpy as np
-import pytest
 
 import jax
 import jax.numpy as jnp

@@ -1,7 +1,6 @@
 """Infrastructure tests: checkpointing (atomicity, elastic reshape),
 gradient compression algebra, neighbor sampler, watchdog, data streams."""
 import numpy as np
-import pytest
 
 import jax
 import jax.numpy as jnp
@@ -14,7 +13,7 @@ from repro.data.sampler import NeighborSampler
 from repro.data.synthetic import lm_batch_stream, random_graph
 from repro.training.compress import (
     CompressionState, compress_grads, dequantize_int8, init_state,
-    quantize_int8, topk_sparsify,
+    quantize_int8,
 )
 from repro.training.optim import (
     AdamWConfig, adamw_update, train_state_init,
