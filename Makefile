@@ -9,7 +9,7 @@ PYTEST = PYTHONPATH=src python -m pytest
 
 .PHONY: test test-fast test-sharded lint lint-ir bench-backends \
 	bench-sharding bench-wide bench-arrange bench-incremental \
-	bench-smoke
+	bench-smoke trace-smoke
 
 test:
 	$(PYTEST) -x -q
@@ -61,3 +61,12 @@ bench-incremental:
 bench-smoke:
 	PYTHONPATH=src python -m benchmarks.run --smoke \
 		--out results/bench-smoke.json
+
+# observability smoke (CI bench-smoke job): run the 3-stratum demo
+# fixpoint with tracing on, export a Chrome trace_event JSON, and
+# validate its schema — the profiler CLI and trace exporter cannot
+# bitrot between perf PRs
+trace-smoke:
+	PYTHONPATH=src python -m repro.observe --demo monitor --size 32 \
+		--trace results/trace-smoke.json
+	PYTHONPATH=src python -m repro.observe --check results/trace-smoke.json

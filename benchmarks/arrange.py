@@ -8,8 +8,9 @@ Two kinds of rows:
   concat + full re-sort, every op re-arranges its operands) and
   ``arrangements=True`` (witness fast path + per-pass
   ArrangementCache + ``relops.merge_sorted`` maintenance). Each row
-  carries the wall time, the *trace-time* launch counters from
-  ``repro.engine.relation.COUNTERS`` (how many lex_order sorts /
+  carries the wall time, the *trace-time* launch counters from the
+  ``arrange.*`` namespace of ``repro.engine.observe.REGISTRY``
+  (formerly ``relation.COUNTERS``: how many lex_order sorts /
   rank-merges the compiled steps contain — the per-iteration launch
   counts, independent of CPU timing noise), and the arrangement cache
   hit rate; the paired row records the sort-launch reduction. Like the
@@ -108,7 +109,7 @@ def bench_maintenance(smoke: bool = False) -> list[dict]:
 def bench(smoke: bool = False) -> list[dict]:
     from repro.core.optimizer import compile_program
     from repro.engine import Engine, EngineConfig
-    from repro.engine import relation as RL
+    from repro.engine import observe
 
     caps = dict(idb_cap=1 << 11 if smoke else 1 << 13,
                 intermediate_cap=1 << 13 if smoke else 1 << 15)
@@ -123,11 +124,15 @@ def bench(smoke: bool = False) -> list[dict]:
             best = float("inf")
             facts = iters = None
             # the first run traces the step functions: scoping it in a
-            # counter window attributes the compiled graphs' launch
+            # registry window attributes the compiled graphs' launch
             # counts to THIS config even if other live engines trace
-            # concurrently-held jits between runs
-            with RL.counter_scope() as counters:
+            # concurrently-held jits between runs (observe.REGISTRY
+            # delta scopes nest; the window holds arrange.* deltas)
+            with observe.REGISTRY.scope("arrange.") as window:
                 out, stats = eng.run(dict(edbs))
+            counters = {k: window.get("arrange." + k, 0)
+                        for k in ("sorts", "merge_sorted", "cache_hits",
+                                  "cache_misses", "cache_fastpath")}
             best = min(best, stats.wall_s)
             facts = int(out[out_rel].shape[0])
             iters = stats.total_iterations

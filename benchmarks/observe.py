@@ -1,0 +1,70 @@
+"""Observability bench table: fixpoint profiles as bench rows.
+
+Two claims per program:
+
+* **overhead** — observe-on vs observe-off wall time for the same
+  fixpoint (the zero-overhead contract measured, not just asserted: the
+  span layer must stay in host-side noise because it adds no device ops
+  and no extra host syncs);
+* **profile** — the stable ``Observation.to_dict()`` embedding
+  (per-stratum iterations + delta trajectories, per-rule trace-time
+  share, memo-jit counters), so ``results/bench.json`` carries the
+  fixpoint shape next to the timings and regressions in iteration
+  counts / rule mix are diffable across commits.
+
+Rows also validate the Chrome trace export schema inline — the bench
+fails loudly if the exporter drifts from the trace_event format.
+"""
+from __future__ import annotations
+
+import time
+
+
+def _programs(smoke: bool):
+    from benchmarks.programs import make_datasets
+
+    ds = make_datasets(0.1 if smoke else 1.0)
+    return {name: ds[name] for name in ("TC", "Reach")}
+
+
+def bench(smoke: bool = False) -> list[dict]:
+    from repro.core.optimizer import compile_program
+    from repro.engine import Engine, EngineConfig, Observation
+    from repro.engine.observe import validate_chrome_trace
+
+    caps = dict(idb_cap=1 << 11 if smoke else 1 << 13,
+                intermediate_cap=1 << 13 if smoke else 1 << 15)
+    rows: list[dict] = []
+    for pname, (src, edbs, out_rel) in _programs(smoke).items():
+        obs = Observation(pname)
+        with obs.activate():
+            compiled = compile_program(src)
+
+        eng_on = Engine(compiled, EngineConfig(observe=obs, **caps))
+        t0 = time.perf_counter()
+        out_on, stats_on = eng_on.run(dict(edbs))
+        t_on = time.perf_counter() - t0
+
+        eng_off = Engine(compiled, EngineConfig(**caps))
+        t0 = time.perf_counter()
+        out_off, stats_off = eng_off.run(dict(edbs))
+        t_off = time.perf_counter() - t0
+
+        assert (out_on[out_rel] == out_off[out_rel]).all(), pname
+        assert stats_on.total_iterations == stats_off.total_iterations
+
+        trace_errs = validate_chrome_trace(obs.to_chrome_trace())
+        assert not trace_errs, f"{pname}: {trace_errs}"
+
+        profile = obs.to_dict()
+        rows.append({
+            "table": "observe", "program": pname,
+            "observe_on_s": round(t_on, 4),
+            "observe_off_s": round(t_off, 4),
+            "overhead": round(t_on / max(t_off, 1e-9), 3),
+            "facts": int(out_on[out_rel].shape[0]),
+            "iterations": stats_on.total_iterations,
+            "trace_events": len(obs.to_chrome_trace()["traceEvents"]),
+            "profile": profile,
+        })
+    return rows

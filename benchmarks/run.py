@@ -13,11 +13,11 @@ from pathlib import Path
 
 ALL_TABLES = ("table1", "seminaive", "robustness", "specialization",
               "incremental", "kernels", "backends", "sharding", "wide",
-              "arrange", "roofline")
+              "arrange", "observe", "roofline")
 
 # the cheap tables --smoke runs by default (CI bitrot guard: the bench
 # harness executes end-to-end on every push, in seconds)
-SMOKE_TABLES = ("arrange", "incremental", "robustness")
+SMOKE_TABLES = ("arrange", "incremental", "robustness", "observe")
 
 
 def collect(only=None, smoke: bool = False) -> list[dict]:
@@ -54,12 +54,21 @@ def collect(only=None, smoke: bool = False) -> list[dict]:
     if "arrange" in only:
         from benchmarks.arrange import bench as bench_arrange
         rows += bench_arrange(smoke=smoke)
+    if "observe" in only:
+        from benchmarks.observe import bench as bench_observe
+        rows += bench_observe(smoke=smoke)
     if "roofline" in only:
         from benchmarks.roofline import rows as roof_rows
         try:
             rows += roof_rows()
         except Exception as e:  # noqa: BLE001
             rows.append({"table": "roofline", "error": repr(e)})
+    # every row is stamped with the observability export schema version
+    # (repro.engine.observe.SCHEMA_VERSION) so report tooling can branch
+    # on row shape across commits
+    from repro.engine.observe import SCHEMA_VERSION
+    for r in rows:
+        r.setdefault("schema_version", SCHEMA_VERSION)
     return rows
 
 

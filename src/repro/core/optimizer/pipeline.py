@@ -9,6 +9,8 @@ position), before sharing, so common subtrees across variants are shared.
 """
 from __future__ import annotations
 
+import contextlib
+import sys
 from dataclasses import dataclass
 
 from repro.core import ir as I
@@ -29,6 +31,18 @@ from repro.core.optimizer.sharing import share_subplans
 # after every optimizer pass even for compiles that pass verify=False.
 # Deliberately-malformed tests opt out via @pytest.mark.no_ir_verify.
 FORCE_VERIFY = False
+
+
+def _ambient_span(name: str, **attrs):
+    """Compile-pass span on the ambient engine.observe.Observation, if
+    one is active. Resolved through sys.modules so core stays importable
+    without pulling in the engine package (and jax): if observe was
+    never imported, no Observation can be active, so a nullcontext is
+    exactly equivalent."""
+    obs_mod = sys.modules.get("repro.engine.observe")
+    if obs_mod is None:
+        return contextlib.nullcontext()
+    return obs_mod.ambient_span(name, **attrs)
 
 
 @dataclass
@@ -255,20 +269,24 @@ def lower_rule(
 
     # -- sip (Sec. 6)
     if options.use_sip and graph.n >= options.sip_min_atoms:
-        schedule = SIP.plan_sip(graph, start=0)
-        leaf_irs = SIP.apply_sip(leaf_irs, schedule)
-        if options.verify_on:
-            for i, leaf in enumerate(leaf_irs):
-                verify_ir_or_raise(
-                    leaf, where=f"leaf {i} of {rule}", pass_name="sip")
+        with _ambient_span("pass", stage="sip", atoms=graph.n):
+            schedule = SIP.plan_sip(graph, start=0)
+            leaf_irs = SIP.apply_sip(leaf_irs, schedule)
+            if options.verify_on:
+                for i, leaf in enumerate(leaf_irs):
+                    verify_ir_or_raise(
+                        leaf, where=f"leaf {i} of {rule}",
+                        pass_name="sip")
 
     # -- rooted JST composition (Sec. 5)
-    if options.use_planner:
-        choices = JG.choose_plan(
-            graph, frozenset(head_vars), options.max_spanning_trees)
-    else:
-        choices = JG.listing_order_plan(graph)
-    ir = _compose_plan(ctx, leaf_irs, choices)
+    with _ambient_span("pass", stage="plan",
+                       planner=bool(options.use_planner)):
+        if options.use_planner:
+            choices = JG.choose_plan(
+                graph, frozenset(head_vars), options.max_spanning_trees)
+        else:
+            choices = JG.listing_order_plan(graph)
+        ir = _compose_plan(ctx, leaf_irs, choices)
 
     if ctx.pending_comps or ctx.pending_negs:
         # vars never became bound together — should not happen for safe rules
@@ -342,6 +360,14 @@ def compile_program(
     program: Program | str,
     options: CompileOptions | None = None,
 ) -> I.CompiledProgram:
+    with _ambient_span("compile"):
+        return _compile_program(program, options)
+
+
+def _compile_program(
+    program: Program | str,
+    options: CompileOptions | None = None,
+) -> I.CompiledProgram:
     if isinstance(program, str):
         program = parse_program(program)
     options = options or CompileOptions()
@@ -381,19 +407,23 @@ def compile_program(
                                        else I.FULL_OLD)
                     variants.append((k, versions))
             for var_idx, versions in variants:
-                root, is_monoid = lower_rule(
-                    rule, st.idbs, versions, options)
-                if options.verify_on:
-                    verify_ir_or_raise(
-                        root, where=f"{rule} [variant {var_idx}]",
-                        pass_name="planning" if options.use_planner
-                        else "listing")
-                if options.use_fusion:
-                    root = fuse(root)
+                with _ambient_span("compile-rule", head=rule.head_name,
+                                   variant=var_idx):
+                    root, is_monoid = lower_rule(
+                        rule, st.idbs, versions, options)
                     if options.verify_on:
                         verify_ir_or_raise(
                             root, where=f"{rule} [variant {var_idx}]",
-                            pass_name="fusion")
+                            pass_name="planning" if options.use_planner
+                            else "listing")
+                    if options.use_fusion:
+                        with _ambient_span("pass", stage="fusion"):
+                            root = fuse(root)
+                        if options.verify_on:
+                            verify_ir_or_raise(
+                                root,
+                                where=f"{rule} [variant {var_idx}]",
+                                pass_name="fusion")
                 if is_monoid:
                     agg = rule.aggregates[0]
                     vpos = next(
@@ -435,10 +465,11 @@ def compile_program(
     # emitting their last column as the value (e.g. facts).
     shared: dict[str, I.IR] = {}
     if options.use_sharing:
-        roots = [p.root for p in plans_all]
-        new_roots, shared = share_subplans(roots)
-        for p, r in zip(plans_all, new_roots):
-            object.__setattr__(p, "root", r)
+        with _ambient_span("pass", stage="sharing", plans=len(plans_all)):
+            roots = [p.root for p in plans_all]
+            new_roots, shared = share_subplans(roots)
+            for p, r in zip(plans_all, new_roots):
+                object.__setattr__(p, "root", r)
 
     compiled = I.CompiledProgram(
         strata=stratum_plans,
@@ -452,6 +483,7 @@ def compile_program(
         # whole-program pass: SharedRef discipline, stratified negation,
         # head arities, stored-arity ceiling — named for the last pass
         # that rewrote the plans
-        verify_program_or_raise(
-            compiled, "sharing" if options.use_sharing else "lowering")
+        with _ambient_span("pass", stage="verify"):
+            verify_program_or_raise(
+                compiled, "sharing" if options.use_sharing else "lowering")
     return compiled

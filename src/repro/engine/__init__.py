@@ -6,6 +6,9 @@ from repro.engine.backend import (
     JNP, JnpDispatch, KernelDispatch, PallasDispatch, resolve_backend,
 )
 from repro.engine.engine import Engine, EngineConfig, EngineStats
+from repro.engine.observe import (
+    REGISTRY, MetricsRegistry, Observation, validate_chrome_trace,
+)
 
 
 def make_engine(compiled, config: EngineConfig | None = None,
@@ -33,4 +36,5 @@ __all__ = [
     "JNP", "JnpDispatch", "KernelDispatch", "PallasDispatch",
     "resolve_backend",
     "Engine", "EngineConfig", "EngineStats", "make_engine",
+    "REGISTRY", "MetricsRegistry", "Observation", "validate_chrome_trace",
 ]

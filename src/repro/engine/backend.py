@@ -92,6 +92,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.engine.observe import trace_count
 from repro.kernels import ops
 
 
@@ -107,6 +108,14 @@ class KernelDispatch:
     # merge-path kernel does); relops.membership then sorts-and-scatters
     # its unsorted probe side instead of calling probe directly.
     needs_sorted_probe = False
+
+    def _count(self, op: str) -> None:
+        """Trace-time kernel-launch counter (``kernel.<backend>.<op>``
+        in observe.REGISTRY): under jit it counts dispatches emitted
+        into the compiled graph, once per compilation. Concrete
+        methods call it; the abstract default derivations don't (they
+        bottom out in counted concrete probes)."""
+        trace_count(f"kernel.{self.name}.{op}")
 
     def probe(self, build_keys: jax.Array, probe_keys: jax.Array):
         """(lo, hi) int32 ranks of sorted int64 probe keys in sorted
@@ -168,6 +177,7 @@ class KernelDispatch:
         within-group index, valid, total). Routed through the seam so a
         Pallas expand kernel can replace the jnp reference without
         touching relops."""
+        self._count("expand")
         return ops.expand_indices(offsets, out_cap, backend="xla")
 
     def __repr__(self):
@@ -180,6 +190,7 @@ class JnpDispatch(KernelDispatch):
     name = "jnp"
 
     def probe(self, build_keys, probe_keys):
+        self._count("probe")
         lo, hi = ops.merge_probe_counts(build_keys, probe_keys,
                                         backend="xla")
         return lo.astype(jnp.int32), hi.astype(jnp.int32)
@@ -187,20 +198,25 @@ class JnpDispatch(KernelDispatch):
     def probe_lo(self, build_keys, probe_keys):
         # one searchsorted pass, not two (matters when jit is off;
         # under jit XLA would DCE the unused hi anyway)
+        self._count("probe_lo")
         return jnp.searchsorted(build_keys, probe_keys,
                                 side="left").astype(jnp.int32)
 
     def probe_multi(self, build_words, probe_words):
+        self._count("probe_multi")
         return ops.merge_probe_multi(build_words, probe_words,
                                      backend="xla")
 
     def merge_ranks(self, a_keys, b_keys):
+        self._count("merge_ranks")
         return ops.merge_ranks(a_keys, b_keys, backend="xla")
 
     def merge_ranks_multi(self, a_words, b_words):
+        self._count("merge_ranks_multi")
         return ops.merge_ranks_multi(a_words, b_words, backend="xla")
 
     def segment_reduce(self, values, seg_ids, num_segments, op):
+        self._count("segment_reduce")
         return ops.segment_reduce(values, seg_ids, num_segments, op,
                                   backend="xla")
 
@@ -217,19 +233,23 @@ class PallasDispatch(KernelDispatch):
         self._mode = "interpret" if interpret else "pallas"
 
     def probe(self, build_keys, probe_keys):
+        self._count("probe")
         return ops.merge_probe_counts(build_keys, probe_keys,
                                       backend=self._mode)
 
     def probe_multi(self, build_words, probe_words):
+        self._count("probe_multi")
         return ops.merge_probe_multi(build_words, probe_words,
                                      backend=self._mode)
 
     def merge_ranks(self, a_keys, b_keys):
         # both rank passes through the blocked merge-path kernel (both
         # sequences are sorted arrangements — the kernel's contract)
+        self._count("merge_ranks")
         return ops.merge_ranks(a_keys, b_keys, backend=self._mode)
 
     def merge_ranks_multi(self, a_words, b_words):
+        self._count("merge_ranks_multi")
         return ops.merge_ranks_multi(a_words, b_words,
                                      backend=self._mode)
 
@@ -238,6 +258,7 @@ class PallasDispatch(KernelDispatch):
         # (exact; a float32 accumulator would round above 2**24) with
         # the same empty-segment identities as jax.ops.segment_*, so
         # no post-processing is needed for bit-equality.
+        self._count("segment_reduce")
         return ops.segment_reduce(values, seg_ids, num_segments, op,
                                   backend=self._mode)
 

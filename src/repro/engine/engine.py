@@ -27,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import ir as I
+from repro.engine import observe as O
 from repro.engine import relops as R
 from repro.engine.backend import KernelDispatch, resolve_backend
 from repro.engine.lower import Env, Evaluator, LowerConfig
@@ -75,6 +76,13 @@ class EngineConfig:
     # contract — sort-order witnesses vs actual data, PAD tails,
     # distinctness, shard homing. Debug-only: O(rows) host transfers.
     check_invariants: bool = False
+    # observability (engine/observe.py): attach an ``Observation`` to
+    # record the span tree of every run/apply (strata, iterations, rule
+    # passes, memo-jit and grow events) plus run-scoped metrics. None
+    # (the default) short-circuits every hook — byte-identical
+    # fixpoints, no host syncs added inside jitted steps either way
+    # (tests/test_observe.py pins this).
+    observe: Optional["O.Observation"] = None
 
 
 @dataclass
@@ -110,6 +118,9 @@ class Engine:
         # (see _memo_jit) — an update stream re-executes the same
         # compiled step instead of re-tracing it per update
         self._jit_memo: dict = {}
+        # structural key -> last full (capacity-qualified) key, to spot
+        # auto-grow retraces for the observability layer
+        self._jit_base_seen: dict = {}
 
     def _memo_jit(self, key: tuple, make):
         """Memoize a jitted stratum function across run()/apply() calls.
@@ -120,15 +131,29 @@ class Engine:
         what makes per-update maintenance latency a steady-state
         execute instead of a fresh trace each time. Capacity changes
         (auto_grow) change the key and re-trace; ``cfg.jit=False``
-        bypasses the memo entirely."""
+        bypasses the memo entirely.
+
+        Observability: counts ``memo_jit.hit`` / ``.miss`` / ``.retrace``
+        on the attached observation's registry (retrace = a structural
+        key already compiled at other capacities — an auto-grow
+        recompile)."""
         if not self.cfg.jit:
             return make()
+        obs = self.cfg.observe
+        base = key
         key = key + (self.cfg.intermediate_cap, self.cfg.idb_cap,
                      tuple(sorted(self.cfg.idb_caps.items())))
         fn = self._jit_memo.get(key)
         if fn is None:
+            if obs is not None:
+                obs.registry.inc("memo_jit.miss")
+                if self._jit_base_seen.get(base, key) != key:
+                    obs.registry.inc("memo_jit.retrace")
+            self._jit_base_seen[base] = key
             fn = jax.jit(make())
             self._jit_memo[key] = fn
+        else:
+            O.count(obs, "memo_jit.hit")
         return fn
 
     # -- helpers -------------------------------------------------------------
@@ -177,12 +202,24 @@ class Engine:
                             backend=self.backend)
         return R.concat_all(rels, sr, cap, backend=self.backend)
 
+    def _rule_phase(self) -> str:
+        """How to read per-rule span durations: under jit rule bodies
+        execute while *tracing* (once per compilation), so spans measure
+        trace/lowering cost + launch-counter attribution; with
+        ``jit=False`` they measure real execution."""
+        return "trace" if self.cfg.jit else "eval"
+
     def _eval_plans(self, plans, env: Env, ev: Evaluator):
         """Evaluate plans, concat per head IDB -> derived relations."""
+        obs = self.cfg.observe
         by_head: dict[str, list[Relation]] = {}
         for p in plans:
-            rel = ev.eval(p.root, env)
-            rel = self._split_monoid(p.head, rel)
+            with O.span(obs, "rule", head=p.head,
+                        rule=("nonrec" if p.variant < 0
+                              else f"v{p.variant}"),
+                        phase=self._rule_phase()):
+                rel = ev.eval(p.root, env)
+                rel = self._split_monoid(p.head, rel)
             by_head.setdefault(p.head, []).append(rel)
         out: dict[str, Relation] = {}
         for head, rels in by_head.items():
@@ -324,13 +361,16 @@ class Engine:
         the evaluator's semijoin hook (which co-partitions under
         sharding). One arrangement scope spans the whole pass, so every
         retagged occurrence shares the stored fulls' arrangements."""
+        obs = self.cfg.observe
         ev.begin_pass()
         env = Env(dict(rels), self.compiled.shared, set(self.monoid))
         by_head: dict[str, list[Relation]] = {}
         for head, root in roots:
-            out = ev.eval(root, env)
-            by_head.setdefault(head, []).append(
-                self._split_monoid(head, out))
+            with O.span(obs, "rule", head=head, rule="maintenance",
+                        phase=self._rule_phase()):
+                out = ev.eval(root, env)
+                split = self._split_monoid(head, out)
+            by_head.setdefault(head, []).append(split)
         derived: dict[str, Relation] = {}
         for head, outs in by_head.items():
             merged, ov = self._merge_head(
@@ -416,7 +456,16 @@ class Engine:
     # -- stratum execution ----------------------------------------------------
     def _run_stratum(self, sp: I.StratumPlan, env_rels, stats,
                      stratum_key, init_state=None):
+        with O.span(self.cfg.observe, "stratum", key=stratum_key,
+                    mode=self.cfg.mode,
+                    recursive=bool(sp.recursive)) as st_span:
+            return self._run_stratum_body(
+                sp, env_rels, stats, stratum_key, init_state, st_span)
+
+    def _run_stratum_body(self, sp: I.StratumPlan, env_rels, stats,
+                          stratum_key, init_state=None, st_span=None):
         base_env_rels = env_rels
+        obs = self.cfg.observe
         cfg = self.cfg
         lcfg = LowerConfig(cfg.intermediate_cap, cfg.semiring,
                            self.backend, cfg.arrangements)
@@ -442,15 +491,20 @@ class Engine:
             # None-seeds are part of the pytree structure, so the memo
             # retraces automatically when a different IDB subset is
             # seeded.
-            seed_step = self._memo_jit(
-                ("seed", sp.index),
-                lambda: lambda given: self._stratum_seed(given, idbs, ev))
-            state, ovf = seed_step(init_state)
+            with O.span(obs, "seed"):
+                seed_step = self._memo_jit(
+                    ("seed", sp.index),
+                    lambda: lambda given: self._stratum_seed(
+                        given, idbs, ev))
+                state, ovf = seed_step(init_state)
+                ovf = bool(ovf)
         else:
-            init_jit = self._memo_jit(("init", sp.index),
-                                      lambda: init_fn)
-            state, ovf = init_jit(dict(base_env_rels))
-        if bool(ovf):
+            with O.span(obs, "init", nonrec_rules=len(nonrec)):
+                init_jit = self._memo_jit(("init", sp.index),
+                                          lambda: init_fn)
+                state, ovf = init_jit(dict(base_env_rels))
+                ovf = bool(ovf)
+        if ovf:
             raise OverflowError_(f"overflow during init of {stratum_key}")
 
         if not sp.recursive or not rec:
@@ -458,6 +512,8 @@ class Engine:
             for name in idbs:
                 full_env[(name, I.FULL)] = state[name][0]
             stats.iterations[stratum_key] = 0
+            if st_span is not None:
+                st_span.attrs["iterations"] = 0
             self._sanitize_env(full_env, f"stratum {stratum_key} boundary")
             return full_env
 
@@ -488,20 +544,31 @@ class Engine:
 
             carry = (state, jnp.array(True), jnp.zeros((), bool),
                      jnp.zeros((), jnp.int32))
-            run_step = self._memo_jit(("device", sp.index), lambda: run)
-            state, _, ovf, iters = run_step(carry, dict(base_env_rels))
-            if bool(ovf):
+            with O.span(obs, "fixpoint-loop", detail="post-hoc"):
+                run_step = self._memo_jit(("device", sp.index),
+                                          lambda: run)
+                state, _, ovf, iters = run_step(carry,
+                                                dict(base_env_rels))
+                ovf = bool(ovf)
+                stratum_iters = int(iters)
+            if ovf:
                 raise OverflowError_(f"overflow in stratum {stratum_key}")
-            stratum_iters = int(iters)
         else:
             step = self._memo_jit(("iter", sp.index), lambda: iter_fn)
-            while True:
-                sizes = {n: int(state[n][1].n) for n in idbs}
-                if all(v == 0 for v in sizes.values()):
-                    break
-                delta_log.append(sum(sizes.values()))
-                state, any_delta, ovf = step(state, base_env_rels)
-                if bool(ovf):
+            # per-iteration delta cardinalities come from the SAME
+            # ``int(delta.n)`` reads the host loop has always used for
+            # termination — observe-on adds no host syncs to the step
+            sizes = {n: int(state[n][1].n) for n in idbs}
+            while not all(v == 0 for v in sizes.values()):
+                delta_total = sum(sizes.values())
+                delta_log.append(delta_total)
+                with O.span(obs, "iteration", index=stratum_iters,
+                            delta_rows=delta_total,
+                            deltas=dict(sizes) if obs else None):
+                    state, any_delta, ovf = step(state, base_env_rels)
+                    ovf = bool(ovf)
+                    sizes = {n: int(state[n][1].n) for n in idbs}
+                if ovf:
                     raise OverflowError_(
                         f"overflow in stratum {stratum_key} "
                         f"iter {stratum_iters}")
@@ -512,18 +579,22 @@ class Engine:
 
         # final merge (loop exits with delta possibly nonempty in device
         # mode only at max_iters; normally a no-op)
-        full_env = dict(base_env_rels)
-        for name in idbs:
-            full, delta = state[name]
-            sr = self._sr_of(name)
-            merged, ov = R.merge(full, delta, sr, self._idb_cap(name),
-                                 backend=self.backend,
-                                 incremental=cfg.arrangements)
-            if bool(ov):
-                raise OverflowError_(f"overflow finalizing {name}")
-            full_env[(name, I.FULL)] = merged
+        with O.span(obs, "final-merge"):
+            full_env = dict(base_env_rels)
+            for name in idbs:
+                full, delta = state[name]
+                sr = self._sr_of(name)
+                merged, ov = R.merge(full, delta, sr,
+                                     self._idb_cap(name),
+                                     backend=self.backend,
+                                     incremental=cfg.arrangements)
+                if bool(ov):
+                    raise OverflowError_(f"overflow finalizing {name}")
+                full_env[(name, I.FULL)] = merged
         stats.iterations[stratum_key] = stratum_iters
         stats.delta_sizes[stratum_key] = delta_log
+        if st_span is not None:
+            st_span.attrs["iterations"] = stratum_iters
         self._sanitize_env(full_env, f"stratum {stratum_key} boundary")
         return full_env
 
@@ -535,7 +606,9 @@ class Engine:
         attempt = 0
         while True:
             try:
-                return self._run_once(edbs, edb_caps)
+                out, stats = self._run_once(edbs, edb_caps)
+                stats.grow_retries = attempt
+                return out, stats
             except OverflowError_:
                 attempt += 1
                 if not self.cfg.auto_grow or (
@@ -545,6 +618,13 @@ class Engine:
                 self.cfg.idb_cap *= 2
                 self.cfg.idb_caps = {
                     k: v * 2 for k, v in self.cfg.idb_caps.items()}
+                obs = self.cfg.observe
+                if obs is not None:
+                    obs.registry.inc("engine.grow_retries")
+                    obs.event(
+                        "grow-retry", attempt=attempt,
+                        intermediate_cap=self.cfg.intermediate_cap,
+                        idb_cap=self.cfg.idb_cap)
 
     def _edb_env(self, edbs, edb_caps) -> dict:
         """Host EDB arrays -> (name, FULL) Relation environment."""
@@ -586,13 +666,17 @@ class Engine:
     def _run_once(self, edbs, edb_caps):
         t0 = time.perf_counter()
         stats = EngineStats()
-        env_rels = self._edb_env(edbs, edb_caps)
+        with O.span(self.cfg.observe, "run",
+                    strata=len(self.compiled.strata),
+                    mode=self.cfg.mode, shards=self.cfg.shards or 1,
+                    backend=type(self.backend).__name__):
+            env_rels = self._edb_env(edbs, edb_caps)
 
-        for sp in self.compiled.strata:
-            env_rels = self._run_stratum(
-                sp, env_rels, stats, f"s{sp.index}")
+            for sp in self.compiled.strata:
+                env_rels = self._run_stratum(
+                    sp, env_rels, stats, f"s{sp.index}")
 
-        out = self._export(env_rels, stats)
+            out = self._export(env_rels, stats)
         stats.wall_s = time.perf_counter() - t0
         self.last_env = env_rels
         return out, stats

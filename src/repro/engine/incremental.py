@@ -77,6 +77,7 @@ import numpy as np
 
 from repro.core import ir as I
 from repro.engine import make_engine
+from repro.engine import observe as O
 from repro.engine.engine import EngineConfig, EngineStats
 from repro.engine.relation import (
     Relation, from_numpy, pow2_cap, to_numpy,
@@ -246,73 +247,103 @@ class IncrementalEngine:
         if not changed:
             return self.snapshot()
 
-        affected: set[int] = set()
-        for name in changed:
-            affected |= self._downstream.get(name, set())
+        obs = self.engine.cfg.observe
+        idb_delta_rows = 0
+        with O.span(obs, "apply",
+                    changed=",".join(sorted(changed)),
+                    insert_rows=sum(len(v) for v in real_ins.values()),
+                    delete_rows=sum(len(v) for v in real_del.values()),
+                    ) as ap_span:
+            affected: set[int] = set()
+            for name in changed:
+                affected |= self._downstream.get(name, set())
 
-        # refresh EDB relations in env (stored form: the sharded driver
-        # scatters each to its home shards)
-        for name in changed:
-            rows = np.array(sorted(self.edbs[name])) if self.edbs[name] else (
-                np.zeros((0, max(self.compiled.arities[name], 1))))
-            self._env[(name, I.FULL)] = self.engine._stored(
-                {name: from_numpy(rows, pow2_cap(len(rows)))})[name]
+            # refresh EDB relations in env (stored form: the sharded
+            # driver scatters each to its home shards)
+            for name in changed:
+                rows = np.array(sorted(self.edbs[name])) if (
+                    self.edbs[name]) else (
+                    np.zeros((0, max(self.compiled.arities[name], 1))))
+                self._env[(name, I.FULL)] = self.engine._stored(
+                    {name: from_numpy(rows, pow2_cap(len(rows)))})[name]
 
-        # change sets grow as strata update (IDB-level diffs feed downstream)
-        ins_changes: dict[str, np.ndarray] = dict(real_ins)
-        del_changes: dict[str, np.ndarray] = dict(real_del)
-        for sp in self.compiled.strata:
-            if sp.index not in affected:
-                continue
-            consumed = self._consumes[sp.index]
-            my_ins = {k: v for k, v in ins_changes.items() if k in consumed}
-            my_del = {k: v for k, v in del_changes.items() if k in consumed}
-            if not my_ins and not my_del:
-                continue
-            old_snap = {n: self._snapshot_idb(n) for n in sp.idbs}
-            monoid_hit = any(n in self.compiled.monoid_idbs for n in sp.idbs)
-            # stratified aggregates (Reduce) are order-sensitive in their
-            # inputs: seeds over changed subsets would aggregate partial
-            # groups. Non-recursive agg strata are one pass — recompute.
-            # Exception: a Reduce feeding a MIN/MAX monoid IDB is seed-safe
-            # (a partial-subset MIN monoid-merges to the true MIN).
-            agg_hit = any(
-                isinstance(n, I.Reduce)
-                for p in sp.plans
-                if p.head not in self.compiled.monoid_idbs
-                for n in I.iter_nodes(p.root))
-            # a change to a relation this stratum NEGATES is inverted
-            # and non-monotone on the head (delete of a negated fact
-            # adds head facts; insert retracts them) — seeds cannot
-            # express either, so recompute (still through the driver:
-            # sharded engines recompute shard-local)
-            neg_hit = bool((set(my_ins) | set(my_del))
-                           & self._neg_consumes[sp.index])
-            if agg_hit or neg_hit or (my_del and monoid_hit):
-                self._recompute_stratum(sp)
-            elif my_del:
-                self._dred_stratum(sp, my_ins, my_del)
-            else:
-                self._insert_stratum(sp, my_ins)
-            # IDB-level diffs for downstream strata
-            for n in sp.idbs:
-                new_snap = self._snapshot_idb(n)
-                old_set = set(map(tuple, old_snap[n]))
-                new_set = set(map(tuple, new_snap))
-                added = sorted(new_set - old_set)
-                removed = sorted(old_set - new_set)
-                if added:
-                    ins_changes[n] = np.array(added)
-                if removed:
-                    del_changes[n] = np.array(removed)
-        # maintained arrangements must satisfy the same contract a batch
-        # run would leave behind (core/analysis/sanitize.py); the
-        # recompute/fixpoint paths were checked per-stratum already —
-        # this covers the seed-merge and DRed update paths
-        if self.engine.cfg.check_invariants:
-            from repro.core.analysis.sanitize import sanitize_env
-            sanitize_env(self.engine, self._env, "incremental apply",
-                         "incremental")
+            # change sets grow as strata update (IDB-level diffs feed
+            # downstream)
+            ins_changes: dict[str, np.ndarray] = dict(real_ins)
+            del_changes: dict[str, np.ndarray] = dict(real_del)
+            for sp in self.compiled.strata:
+                if sp.index not in affected:
+                    continue
+                consumed = self._consumes[sp.index]
+                my_ins = {k: v for k, v in ins_changes.items()
+                          if k in consumed}
+                my_del = {k: v for k, v in del_changes.items()
+                          if k in consumed}
+                if not my_ins and not my_del:
+                    continue
+                old_snap = {n: self._snapshot_idb(n) for n in sp.idbs}
+                monoid_hit = any(n in self.compiled.monoid_idbs
+                                 for n in sp.idbs)
+                # stratified aggregates (Reduce) are order-sensitive in
+                # their inputs: seeds over changed subsets would
+                # aggregate partial groups. Non-recursive agg strata are
+                # one pass — recompute. Exception: a Reduce feeding a
+                # MIN/MAX monoid IDB is seed-safe (a partial-subset MIN
+                # monoid-merges to the true MIN).
+                agg_hit = any(
+                    isinstance(n, I.Reduce)
+                    for p in sp.plans
+                    if p.head not in self.compiled.monoid_idbs
+                    for n in I.iter_nodes(p.root))
+                # a change to a relation this stratum NEGATES is
+                # inverted and non-monotone on the head (delete of a
+                # negated fact adds head facts; insert retracts them) —
+                # seeds cannot express either, so recompute (still
+                # through the driver: sharded engines recompute
+                # shard-local)
+                neg_hit = bool((set(my_ins) | set(my_del))
+                               & self._neg_consumes[sp.index])
+                if agg_hit or neg_hit or (my_del and monoid_hit):
+                    strategy = "recompute"
+                elif my_del:
+                    strategy = "dred"
+                else:
+                    strategy = "seed-insert"
+                with O.span(obs, "maintain-stratum",
+                            key=f"s{sp.index}", strategy=strategy):
+                    O.count(obs, f"incremental.{strategy}")
+                    if strategy == "recompute":
+                        self._recompute_stratum(sp)
+                    elif strategy == "dred":
+                        self._dred_stratum(sp, my_ins, my_del)
+                    else:
+                        self._insert_stratum(sp, my_ins)
+                # IDB-level diffs for downstream strata
+                for n in sp.idbs:
+                    new_snap = self._snapshot_idb(n)
+                    old_set = set(map(tuple, old_snap[n]))
+                    new_set = set(map(tuple, new_snap))
+                    added = sorted(new_set - old_set)
+                    removed = sorted(old_set - new_set)
+                    idb_delta_rows += len(added) + len(removed)
+                    if added:
+                        ins_changes[n] = np.array(added)
+                    if removed:
+                        del_changes[n] = np.array(removed)
+            # maintained arrangements must satisfy the same contract a
+            # batch run would leave behind (core/analysis/sanitize.py);
+            # the recompute/fixpoint paths were checked per-stratum
+            # already — this covers the seed-merge and DRed update paths
+            if self.engine.cfg.check_invariants:
+                from repro.core.analysis.sanitize import sanitize_env
+                sanitize_env(self.engine, self._env, "incremental apply",
+                             "incremental")
+        if obs is not None:
+            # per-update maintenance latency (span closes before the
+            # final snapshot export, so this is maintenance cost, not
+            # numpy export cost) + IDB-level churn per update
+            obs.registry.observe("update.latency_s", ap_span.dur)
+            obs.registry.observe("update.delta_rows", idb_delta_rows)
         return self.snapshot()
 
     def _rows(self, rel) -> np.ndarray:
@@ -400,8 +431,11 @@ class IncrementalEngine:
         # relations re-executes one compiled pass
         memo_key = (sp.index, "seed", tuple(sorted(changed_rows)),
                     tuple(sorted(restrict)) if restrict else ())
-        return self.engine.run_rule_pass(rels, roots, restrict=restrict,
-                                         memo_key=memo_key)
+        with O.span(self.engine.cfg.observe, "seed-pass",
+                    stratum=f"s{sp.index}",
+                    changed=",".join(sorted(changed_rows))):
+            return self.engine.run_rule_pass(
+                rels, roots, restrict=restrict, memo_key=memo_key)
 
     def _insert_stratum(self, sp: I.StratumPlan,
                         inserts: dict[str, np.ndarray]) -> None:
@@ -433,19 +467,28 @@ class IncrementalEngine:
         # a semijoin against the current fulls, evaluated inside the
         # pass (shard-local under sharding) — only the small candidate
         # set ever reaches the host
+        obs = self.engine.cfg.observe
         exists = {n: self._env[(n, I.FULL)] for n in sp.idbs}
         candidates: dict[str, set[tuple]] = {n: set() for n in sp.idbs}
-        frontier = del_rel
-        while frontier:
-            step = self._seed(sp, frontier, old_env, restrict=exists)
-            new_rows: dict[str, np.ndarray] = {}
-            for head, rel in step.items():
-                rows = set(map(tuple, self._rows(rel)))
-                new = rows - candidates[head]
-                if new:
-                    candidates[head] |= new
-                    new_rows[head] = np.array(sorted(new))
-            frontier = self._stored_from_rows(new_rows)
+        rounds = 0
+        with O.span(obs, "dred-candidates") as cand_span:
+            frontier = del_rel
+            while frontier:
+                rounds += 1
+                step = self._seed(sp, frontier, old_env, restrict=exists)
+                new_rows: dict[str, np.ndarray] = {}
+                for head, rel in step.items():
+                    rows = set(map(tuple, self._rows(rel)))
+                    new = rows - candidates[head]
+                    if new:
+                        candidates[head] |= new
+                        new_rows[head] = np.array(sorted(new))
+                frontier = self._stored_from_rows(new_rows)
+            if cand_span is not None:
+                cand_span.attrs["rounds"] = rounds
+                cand_span.attrs["candidate_rows"] = sum(
+                    len(v) for v in candidates.values())
+        O.count(obs, "incremental.dred_rounds", rounds)
 
         candidates_rel = self._stored_from_rows(
             {name: np.array(sorted(rows))
@@ -453,19 +496,22 @@ class IncrementalEngine:
 
         # 2. remove candidates from stored fulls (shard-local: both
         #    sides are home-partitioned by full row)
-        for name, cand in candidates_rel.items():
-            self._env[(name, I.FULL)] = self.engine._difference_stored(
-                self._env[(name, I.FULL)], cand)
+        with O.span(obs, "dred-remove"):
+            for name, cand in candidates_rel.items():
+                self._env[(name, I.FULL)] = (
+                    self.engine._difference_stored(
+                        self._env[(name, I.FULL)], cand))
 
         # 3. re-derive: run rules against the reduced state; anything still
         #    derivable (incl. candidates with alternate support) comes back
         #    through the standard fixpoint continuation.
         plain_roots = [(p.head, _retag_all_full(p.root))
                        for p in _unique_rules(sp.plans)]
-        rederive = self.engine.run_rule_pass(
-            dict(self._env), plain_roots, restrict=candidates_rel,
-            memo_key=(sp.index, "rederive",
-                      tuple(sorted(candidates_rel))))
+        with O.span(obs, "dred-rederive"):
+            rederive = self.engine.run_rule_pass(
+                dict(self._env), plain_roots, restrict=candidates_rel,
+                memo_key=(sp.index, "rederive",
+                          tuple(sorted(candidates_rel))))
         # 4. insertions seeded on the post-deletion state
         if inserts:
             ins_rel = self._stored_from_rows(inserts)

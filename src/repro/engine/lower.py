@@ -24,6 +24,7 @@ import jax.numpy as jnp
 from repro.core import ir as I
 from repro.engine import relops as R
 from repro.engine.backend import KernelDispatch
+from repro.engine.observe import trace_count
 from repro.engine.relation import PAD, Relation, live_mask
 from repro.engine.semiring import PRESENCE, Semiring
 
@@ -185,9 +186,12 @@ class Evaluator:
 
     def _eval_sharedref(self, node: I.SharedRef, env: Env):
         if node.ref not in env.memo:
+            trace_count("lower.sharedref_misses")
             sub = env.shared[node.ref]
             rel, ovf = self._eval(sub, env)
             env.memo[node.ref] = (rel, ovf)
+        else:
+            trace_count("lower.sharedref_hits")
         rel, ovf = env.memo[node.ref]
         return rel, ovf
 

@@ -90,9 +90,12 @@ guarantees here.
 from __future__ import annotations
 
 import contextlib
+from collections.abc import MutableMapping
 from typing import Optional
 
 import jax
+
+from repro.engine import observe as _observe
 
 # Packed 62-bit join keys need int64; the engine enables x64 at import.
 # Model/launch code never relies on implicit 64-bit defaults (all dtypes
@@ -117,18 +120,46 @@ MAX_STORED_COLUMNS = 8
 # to measure the word-loop overhead (benchmarks/wide.py).
 _FORCE_MULTIWORD = False
 
-# Trace-time instrumentation for the arrangement layer (benchmarks/
-# arrange.py): how many sort launches / rank-merges / cache outcomes a
-# compiled step contains. Under jit these count ops *emitted into the
-# graph* (they advance while tracing, once per compilation), which is
-# exactly the per-iteration launch count the bench reports.
-COUNTERS = {
-    "sorts": 0,           # lex_order launches (full row sorts)
-    "merge_sorted": 0,    # incremental rank-merge maintenance steps
-    "cache_hits": 0,      # ArrangementCache reuse across rules/subplans
-    "cache_misses": 0,
-    "cache_fastpath": 0,  # witness says already arranged: no sort at all
-}
+# Trace-time instrumentation for the arrangement layer now lives in the
+# engine-wide metrics registry (engine/observe.py) under the
+# ``arrange.*`` namespace: how many sort launches / rank-merges / cache
+# outcomes a compiled step contains. Under jit these count ops *emitted
+# into the graph* (they advance while tracing, once per compilation),
+# which is exactly the per-iteration launch count benchmarks/arrange.py
+# reports. ``COUNTERS`` below is a back-compat dict view over that
+# namespace (kept one release — new code should use
+# ``observe.REGISTRY`` / ``observe.trace_count`` directly).
+_COUNTER_NS = "arrange."
+_COUNTER_KEYS = ("sorts", "merge_sorted", "cache_hits",
+                 "cache_misses", "cache_fastpath")
+
+
+class _CountersView(MutableMapping):
+    """Deprecated dict facade over the ``arrange.*`` registry counters —
+    preserves the old ``relation.COUNTERS`` mutation API (`+=`, reads,
+    in-place sharing with relops) while the single source of truth is
+    ``observe.REGISTRY``."""
+
+    def __getitem__(self, k):
+        return _observe.REGISTRY.get(_COUNTER_NS + k)
+
+    def __setitem__(self, k, v):
+        _observe.REGISTRY.set(_COUNTER_NS + k, int(v))
+
+    def __delitem__(self, k):
+        raise TypeError("COUNTERS keys are fixed")
+
+    def __iter__(self):
+        return iter(_COUNTER_KEYS)
+
+    def __len__(self):
+        return len(_COUNTER_KEYS)
+
+    def __repr__(self):
+        return repr(dict(self))
+
+
+COUNTERS = _CountersView()
 
 
 # Sort-order witness sentinel: rows in no guaranteed order (e.g. a
@@ -139,36 +170,37 @@ UNSORTED = ("unsorted",)
 
 
 def reset_counters() -> None:
-    for k in COUNTERS:
-        COUNTERS[k] = 0
+    """Deprecated — zero the ``arrange.*`` registry counters. Prefer
+    ``observe.REGISTRY.scope("arrange.")`` windows over global resets."""
+    for k in _COUNTER_KEYS:
+        _observe.REGISTRY.set(_COUNTER_NS + k, 0)
 
 
 def counters_snapshot() -> dict:
+    """Deprecated — ``observe.REGISTRY.counters_snapshot("arrange.")``
+    with short keys."""
     return dict(COUNTERS)
 
 
 @contextlib.contextmanager
 def counter_scope():
-    """Explicitly scoped counter window: yields a dict that, on exit,
-    holds exactly the counts accumulated *inside* the block, while the
-    global COUNTERS keep accumulating across the block (outer scopes
-    still see totals).
-
-    This is the supported way to attribute launch counts to one config
-    (benchmarks/arrange.py): the global reset_counters/counters_snapshot
-    pair is mutated from trace-time callsites across *all* live engines,
-    so interleaved resets cross-contaminate measurements. COUNTERS is
-    mutated in place — relops holds a direct reference."""
-    before = dict(COUNTERS)
-    for k in COUNTERS:
-        COUNTERS[k] = 0
+    """Deprecated shim over ``observe.REGISTRY`` — explicitly scoped
+    counter window: yields a dict that, on exit, holds exactly the
+    ``arrange.*`` counts accumulated *inside* the block, while the
+    registry keeps accumulating across the block (outer scopes still
+    see totals). New code should use
+    ``observe.REGISTRY.scope("arrange.")``, which reports the same
+    window without the zero/restore dance (and with namespaced keys)."""
+    before = {k: COUNTERS[k] for k in _COUNTER_KEYS}
+    for k in _COUNTER_KEYS:
+        _observe.REGISTRY.set(_COUNTER_NS + k, 0)
     window: dict = {}
     try:
         yield window
     finally:
-        window.update(COUNTERS)
-        for k in COUNTERS:
-            COUNTERS[k] += before[k]
+        window.update({k: COUNTERS[k] for k in _COUNTER_KEYS})
+        for k in _COUNTER_KEYS:
+            _observe.REGISTRY.inc(_COUNTER_NS + k, before[k])
 
 
 @jax.tree_util.register_pytree_node_class
@@ -354,7 +386,7 @@ def live_mask(rel: Relation) -> jax.Array:
 def lex_order(data: jax.Array) -> jax.Array:
     """Row ordering permutation: lexicographic by column 0, 1, ...; PAD
     rows sort last (PAD is the int32 maximum in every column)."""
-    COUNTERS["sorts"] += 1
+    _observe.trace_count("arrange.sorts")
     arity = data.shape[1]
     return jnp.lexsort(tuple(data[:, c] for c in range(arity - 1, -1, -1)))
 

@@ -46,8 +46,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.engine.backend import JNP, KernelDispatch
+from repro.engine.observe import trace_count
 from repro.engine.relation import (
-    COUNTERS, KEY_PAD, PAD, Relation, lex_order, lex_order_words,
+    KEY_PAD, PAD, Relation, lex_order, lex_order_words,
     live_mask, pack_key_words, rows_equal_prev,
 )
 from repro.engine.semiring import Semiring, PRESENCE
@@ -100,6 +101,7 @@ def dedupe(data: jax.Array, val: Optional[jax.Array], sr: Semiring,
     dispatches through the injected ``backend`` exactly like
     ``reduce_groups``."""
     bk = backend or JNP
+    trace_count("relops.dedupe")
     if sr.has_value and val is None:
         val = jnp.ones((data.shape[0],), sr.dtype)  # implicit lift (Sec. 8)
     if not assume_sorted:
@@ -149,7 +151,7 @@ def arrange(rel: Relation, key_cols: tuple[int, ...]) -> Relation:
     across the fast path."""
     key_cols = tuple(key_cols)
     if rel.arranged_by(key_cols):
-        COUNTERS["cache_fastpath"] += 1
+        trace_count("arrange.cache_fastpath")
         return rel
     perm = tuple(key_cols) + tuple(c for c in range(rel.arity)
                                    if c not in key_cols)
@@ -190,17 +192,17 @@ class ArrangementCache:
                 ) -> Relation:
         key_cols = tuple(key_cols)
         if rel.arranged_by(key_cols):
-            COUNTERS["cache_fastpath"] += 1
+            trace_count("arrange.cache_fastpath")
             return rel
         key = (id(rel.data), key_cols)
         ent = self._entries.get(key)
         if ent is not None and ent[0] is rel.data and (
                 ent[1] is rel.val) and ent[2] is rel.n:
             self.hits += 1
-            COUNTERS["cache_hits"] += 1
+            trace_count("arrange.cache_hits")
             return ent[3]
         self.misses += 1
-        COUNTERS["cache_misses"] += 1
+        trace_count("arrange.cache_misses")
         arranged = arrange(rel, key_cols)
         self._entries[key] = (rel.data, rel.val, rel.n, arranged)
         return arranged
@@ -216,10 +218,10 @@ class ArrangementCache:
         if ent is not None and all(
                 a is b for a, b in zip(ent[0], keyed_leaves)):
             self.hits += 1
-            COUNTERS["cache_hits"] += 1
+            trace_count("arrange.cache_hits")
             return ent[1]
         self.misses += 1
-        COUNTERS["cache_misses"] += 1
+        trace_count("arrange.cache_misses")
         out = compute()
         self._entries[key] = (keyed_leaves, out)
         return out
@@ -270,6 +272,7 @@ def join(left: Relation, right: Relation,
     single-word for <= 3 key columns (the narrow fast path), word-wise
     for wider keys."""
     bk = backend or JNP
+    trace_count("relops.join")
     if not arranged:
         left = _arrange(cache, left, l_keys)
         right = _arrange(cache, right, r_keys)
@@ -315,6 +318,7 @@ def membership(left: Relation, right: Relation,
     ROADMAP). KEY_PAD probes sort last and may overcount their hi rank
     in-kernel; the trailing live-mask AND discards them."""
     bk = backend or JNP
+    trace_count("relops.membership")
     if not right_arranged:
         right = _arrange(cache, right, r_keys)
     if len(l_keys) == 0:
@@ -410,7 +414,7 @@ def merge_sorted(full: Relation, delta: Relation, sr: Semiring,
     Dead rows key as KEY_PAD and land in (or are dropped past) the PAD
     tail; either way the buffer byte-matches across backends."""
     bk = backend or JNP
-    COUNTERS["merge_sorted"] += 1
+    trace_count("arrange.merge_sorted")
     m, n = full.capacity, delta.capacity
     cols = tuple(range(full.arity))
     fk = pack_key_words(full.data, cols, live_mask(full))
@@ -510,6 +514,7 @@ def reduce_groups(rel: Relation, group_cols: tuple[int, ...],
     key), which is exactly the Pallas kernel's contract. The group-key
     arrangement resolves through ``cache``/witness like the join's."""
     bk = backend or JNP
+    trace_count("relops.reduce_groups")
     r = _arrange(cache, rel, group_cols)
     live = live_mask(r)
     gkey = pack_key_words(r.data, group_cols, live)

@@ -76,10 +76,12 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec
 
 from repro.core import ir as I
+from repro.engine import observe as O
 from repro.engine import relops as R
 from repro.engine.engine import (
     Engine, EngineConfig, OverflowError_,
 )
+from repro.engine.observe import trace_count
 from repro.engine.lower import Evaluator, LowerConfig
 from repro.engine.relation import (
     PAD, Relation, from_numpy, live_mask, pow2_cap,
@@ -178,6 +180,15 @@ def repartition_rows(data: jax.Array, val: Optional[jax.Array],
     cap, arity = data.shape
     if sr.has_value and val is None:
         val = jnp.ones((cap,), sr.dtype)
+    # trace-time wire-volume accounting: the padded buffer IS the wire
+    # volume — every launch moves the whole [S, cap, arity] send buffer
+    # per shard regardless of live rows, so these per-shard byte/slot
+    # counts are exact and static (int32 = 4 bytes; +1 "column" when a
+    # val plane ships too)
+    trace_count("shard.all_to_all.launches")
+    trace_count("shard.all_to_all.slots", num_shards * cap)
+    planes = arity + (1 if val is not None else 0)
+    trace_count("shard.all_to_all.bytes", num_shards * cap * planes * 4)
     dest = shard_of(data, key_cols, live, num_shards)
     order = jnp.argsort(dest)               # stable; dead rows last
     data = data[order]
@@ -320,6 +331,7 @@ class ShardedEngine(Engine):
         lands on it. Stable compaction preserves sortedness."""
         if not rels:
             return {}
+        O.count(self.cfg.observe, "shard.scatter_env", len(rels))
         identities = {k: self._sr_of(k[0] if isinstance(k, tuple) else k)
                       for k in rels}
 
@@ -358,6 +370,7 @@ class ShardedEngine(Engine):
         merge (regression-tested in tests/test_sharded.py)."""
         if isinstance(rel, Relation):
             return rel
+        O.count(self.cfg.observe, "shard.host_gathers")
         data = np.asarray(rel.data)
         ns = np.asarray(rel.n)
         rows = np.concatenate(
@@ -373,8 +386,11 @@ class ShardedEngine(Engine):
         return from_numpy(rows, cap, val=vals, dedupe=False)
 
     # -- stratum execution ----------------------------------------------------
-    def _run_stratum(self, sp: I.StratumPlan, env_rels, stats,
-                     stratum_key, init_state=None):
+    # (the stratum span comes from Engine._run_stratum, which wraps this
+    # body for both drivers)
+    def _run_stratum_body(self, sp: I.StratumPlan, env_rels, stats,
+                          stratum_key, init_state=None, st_span=None):
+        obs = self.cfg.observe
         cfg = self.cfg
         lcfg = LowerConfig(cfg.intermediate_cap, cfg.semiring,
                            self.backend, cfg.arrangements)
@@ -405,25 +421,29 @@ class ShardedEngine(Engine):
                     _unstack(given_g), idbs, ev)
                 return _restack(state), ovf[None]
 
-            seed_step = self._memo_jit(
-                ("shard_seed", sp.index),
-                lambda: self._shmap(seed_fn, jit=False))
-            state, ovf = seed_step(given)
+            with O.span(obs, "seed"):
+                seed_step = self._memo_jit(
+                    ("shard_seed", sp.index),
+                    lambda: self._shmap(seed_fn, jit=False))
+                state, ovf = seed_step(given)
+                ovf = bool(np.asarray(ovf).any())
         else:
-            init_rels = self._scatter_env(
-                {name: self._ground_relation(sp, name) for name in idbs})
-
             def init_fn(base_g, init_g):
                 base, init = _unstack(base_g), _unstack(init_g)
                 state, ovf = self._stratum_init(
                     base, init, nonrec, idbs, ev, monoid_names)
                 return _restack(state), ovf[None]
 
-            init_step = self._memo_jit(
-                ("shard_init", sp.index),
-                lambda: self._shmap(init_fn, jit=False))
-            state, ovf = init_step(dict(env_rels), init_rels)
-        if bool(np.asarray(ovf).any()):
+            with O.span(obs, "init", nonrec_rules=len(nonrec)):
+                init_rels = self._scatter_env(
+                    {name: self._ground_relation(sp, name)
+                     for name in idbs})
+                init_step = self._memo_jit(
+                    ("shard_init", sp.index),
+                    lambda: self._shmap(init_fn, jit=False))
+                state, ovf = init_step(dict(env_rels), init_rels)
+                ovf = bool(np.asarray(ovf).any())
+        if ovf:
             raise OverflowError_(f"overflow during init of {stratum_key}")
 
         if not sp.recursive or not rec:
@@ -431,6 +451,8 @@ class ShardedEngine(Engine):
             for name in idbs:
                 full_env[(name, I.FULL)] = state[name][0]
             stats.iterations[stratum_key] = 0
+            if st_span is not None:
+                st_span.attrs["iterations"] = 0
             self._sanitize_env(full_env, f"stratum {stratum_key} boundary")
             return full_env
 
@@ -461,13 +483,15 @@ class ShardedEngine(Engine):
                 st, _, ovf, iters = jax.lax.while_loop(cond, body, carry)
                 return _restack(st), ovf[None], iters[None]
 
-            device_step = self._memo_jit(
-                ("shard_device", sp.index),
-                lambda: self._shmap(device_fn, jit=False))
-            state, ovf, iters = device_step(dict(env_rels), state)
-            if bool(np.asarray(ovf).any()):
+            with O.span(obs, "fixpoint-loop", detail="post-hoc"):
+                device_step = self._memo_jit(
+                    ("shard_device", sp.index),
+                    lambda: self._shmap(device_fn, jit=False))
+                state, ovf, iters = device_step(dict(env_rels), state)
+                ovf = bool(np.asarray(ovf).any())
+                stratum_iters = int(np.asarray(iters)[0])
+            if ovf:
                 raise OverflowError_(f"overflow in stratum {stratum_key}")
-            stratum_iters = int(np.asarray(iters)[0])
         else:
             def step_fn(state_g, base_g):
                 state, base = _unstack(state_g), _unstack(base_g)
@@ -477,14 +501,21 @@ class ShardedEngine(Engine):
 
             step = self._memo_jit(("shard_iter", sp.index),
                                   lambda: self._shmap(step_fn, jit=False))
-            while True:
-                sizes = {n: int(np.asarray(state[n][1].n).sum())
-                         for n in idbs}
-                if all(v == 0 for v in sizes.values()):
-                    break
-                delta_log.append(sum(sizes.values()))
-                state, ovf = step(state, dict(env_rels))
-                if bool(np.asarray(ovf).any()):
+            # per-iteration deltas ride the loop's existing per-shard
+            # count reads (the [S] sum) — no host syncs added
+            sizes = {n: int(np.asarray(state[n][1].n).sum())
+                     for n in idbs}
+            while not all(v == 0 for v in sizes.values()):
+                delta_total = sum(sizes.values())
+                delta_log.append(delta_total)
+                with O.span(obs, "iteration", index=stratum_iters,
+                            delta_rows=delta_total,
+                            deltas=dict(sizes) if obs else None):
+                    state, ovf = step(state, dict(env_rels))
+                    ovf = bool(np.asarray(ovf).any())
+                    sizes = {n: int(np.asarray(state[n][1].n).sum())
+                             for n in idbs}
+                if ovf:
                     raise OverflowError_(
                         f"overflow in stratum {stratum_key} "
                         f"iter {stratum_iters}")
@@ -507,16 +538,21 @@ class ShardedEngine(Engine):
                 out[name] = merged
             return _restack(out), ovf[None]
 
-        final_step = self._memo_jit(("shard_final", sp.index),
-                                    lambda: self._shmap(final_fn, jit=False))
-        merged, ovf = final_step(state)
-        if bool(np.asarray(ovf).any()):
+        with O.span(obs, "final-merge"):
+            final_step = self._memo_jit(
+                ("shard_final", sp.index),
+                lambda: self._shmap(final_fn, jit=False))
+            merged, ovf = final_step(state)
+            ovf = bool(np.asarray(ovf).any())
+        if ovf:
             raise OverflowError_(f"overflow finalizing {stratum_key}")
         full_env = dict(env_rels)
         for name in idbs:
             full_env[(name, I.FULL)] = merged[name]
         stats.iterations[stratum_key] = stratum_iters
         stats.delta_sizes[stratum_key] = delta_log
+        if st_span is not None:
+            st_span.attrs["iterations"] = stratum_iters
         self._sanitize_env(full_env, f"stratum {stratum_key} boundary")
         return full_env
 

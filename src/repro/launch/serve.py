@@ -19,6 +19,7 @@ import numpy as np
 
 def main(argv=None) -> dict:
     from repro.configs import get_arch
+    from repro.engine.observe import MetricsRegistry
     from repro.models import transformer as T
 
     ap = argparse.ArgumentParser()
@@ -47,6 +48,12 @@ def main(argv=None) -> dict:
     decode = jax.jit(lambda p, tok, cache: T.decode_step(
         p, cfg, tok, cache))
 
+    # serving-side latency metrics ride on the same registry primitive
+    # as the Datalog engine (repro.engine.observe): prefill gauge +
+    # per-decode-step histogram, so the p50/p99 split separates steady
+    # decode from the first compiled step
+    reg = MetricsRegistry()
+
     t0 = time.time()
     logits, cache = prefill(params, jnp.asarray(prompts, jnp.int32))
     pad = cap - args.prompt_len
@@ -54,20 +61,29 @@ def main(argv=None) -> dict:
         k=jnp.pad(cache.k, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0))),
         v=jnp.pad(cache.v, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0))))
     t_prefill = time.time() - t0
+    reg.gauge("serve.prefill_s", t_prefill)
 
     generated = []
     tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
     t0 = time.time()
     for _ in range(args.gen_tokens):
         generated.append(np.asarray(tok)[:, 0])
+        t_step = time.time()
         logits, cache = decode(params, tok, cache)
         tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        # barrier so the sample covers real device work; the next
+        # iteration's host transfer of `tok` then costs nothing extra
+        tok.block_until_ready()
+        reg.observe("serve.decode_step_s", time.time() - t_step)
     t_decode = time.time() - t0
     gen = np.stack(generated, axis=1)
+    steps = reg.percentiles("serve.decode_step_s") or {}
     out = {
         "requests": args.requests,
         "prefill_s": round(t_prefill, 3),
         "decode_s": round(t_decode, 3),
+        "decode_step_p50_ms": round(steps.get("p50", 0.0) * 1e3, 2),
+        "decode_step_p99_ms": round(steps.get("p99", 0.0) * 1e3, 2),
         "tokens_per_s": round(
             args.requests * args.gen_tokens / max(t_decode, 1e-9), 1),
         "sample_output": gen[0][:8].tolist(),
