@@ -1,15 +1,19 @@
 # Test tiers (see pytest.ini for the `slow` marker):
-#   test-fast    — everything except the per-architecture smoke tests
-#                  (~2-3 min; the CI push tier)
-#   test-sharded — the sharded-engine equivalence suite (including the
-#                  wide-row cases) plus the wide-row suite on 8 forced
-#                  host devices (part of the CI push tier)
-#   test         — the full tier-1 command from ROADMAP.md (~4.5 min)
+#   test-fast       — everything except the per-architecture smoke tests
+#                     (~2-3 min; the CI push tier)
+#   test-sharded    — the sharded-engine equivalence suite (including
+#                     the wide-row cases) plus the wide-row suite on 8
+#                     forced host devices (part of the CI push tier)
+#   test-resilience — the fault-tolerance suite: crash-replay
+#                     differential, degradation ladder, snapshot
+#                     re-homing, on 8 forced host devices (CI sharded
+#                     job)
+#   test            — the full tier-1 command from ROADMAP.md (~4.5 min)
 PYTEST = PYTHONPATH=src python -m pytest
 
-.PHONY: test test-fast test-sharded lint lint-ir bench-backends \
-	bench-sharding bench-wide bench-arrange bench-incremental \
-	bench-smoke trace-smoke
+.PHONY: test test-fast test-sharded test-resilience lint lint-ir \
+	bench-backends bench-sharding bench-wide bench-arrange \
+	bench-incremental bench-smoke trace-smoke
 
 test:
 	$(PYTEST) -x -q
@@ -36,6 +40,10 @@ test-sharded:
 		$(PYTEST) -x -q tests/test_sharded.py tests/test_wide.py \
 		tests/test_arrange.py tests/test_update_streams.py \
 		tests/test_analysis.py
+
+test-resilience:
+	XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+		$(PYTEST) -x -q tests/test_resilience.py
 
 bench-backends:
 	PYTHONPATH=src python -m benchmarks.run --only backends

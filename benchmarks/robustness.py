@@ -70,11 +70,9 @@ def _run(src, edbs, opts, cap=1 << 14, inter=1 << 16):
     eng = Engine(cp, EngineConfig(idb_cap=cap, intermediate_cap=inter,
                                   max_grow_retries=6))
     t0 = time.perf_counter()
-    grow0 = eng.cfg.intermediate_cap
     out, stats = eng.run(edbs)
     wall = time.perf_counter() - t0
-    grows = int(np.log2(eng.cfg.intermediate_cap // grow0))
-    return wall, grows, out, stats
+    return wall, stats.grow_retries, out, stats
 
 
 # flag threshold for the static analyzer: variants whose peak

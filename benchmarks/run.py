@@ -13,11 +13,13 @@ from pathlib import Path
 
 ALL_TABLES = ("table1", "seminaive", "robustness", "specialization",
               "incremental", "kernels", "backends", "sharding", "wide",
-              "arrange", "observe", "roofline")
+              "arrange", "observe", "resilience", "roofline")
 
 # the cheap tables --smoke runs by default (CI bitrot guard: the bench
-# harness executes end-to-end on every push, in seconds)
-SMOKE_TABLES = ("arrange", "incremental", "robustness", "observe")
+# harness executes end-to-end on every push, in seconds; resilience
+# rides along so the crash-replay differential runs on every push)
+SMOKE_TABLES = ("arrange", "incremental", "robustness", "observe",
+                "resilience")
 
 
 def collect(only=None, smoke: bool = False) -> list[dict]:
@@ -57,6 +59,9 @@ def collect(only=None, smoke: bool = False) -> list[dict]:
     if "observe" in only:
         from benchmarks.observe import bench as bench_observe
         rows += bench_observe(smoke=smoke)
+    if "resilience" in only:
+        from benchmarks.resilience import bench as bench_resilience
+        rows += bench_resilience(smoke=smoke)
     if "roofline" in only:
         from benchmarks.roofline import rows as roof_rows
         try:

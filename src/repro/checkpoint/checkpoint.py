@@ -28,6 +28,8 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
+from repro.engine.faults import fault_point
+
 
 def _flatten_with_paths(tree):
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
@@ -39,9 +41,19 @@ def _flatten_with_paths(tree):
 
 
 def save_checkpoint(directory: str | Path, step: int, state: Any,
-                    pspecs: Any = None, keep: int = 3) -> Path:
+                    pspecs: Any = None, keep: int = 3,
+                    extra: Optional[dict] = None) -> Path:
+    """``extra`` is an arbitrary JSON-serializable dict stored under
+    the manifest's ``extra`` key (the resilience layer puts its
+    program-hash / config-fingerprint compatibility record there)."""
     directory = Path(directory)
     directory.mkdir(parents=True, exist_ok=True)
+    # a crash mid-write leaves a stale step_XXXX.tmp behind; it is
+    # invisible to all_steps/latest_step, and cleaned up here on the
+    # next save
+    for d in directory.iterdir():
+        if d.is_dir() and d.name.endswith(".tmp"):
+            _rmtree(d)
     tmp = directory / f"step_{step:08d}.tmp"
     final = directory / f"step_{step:08d}"
     if final.exists():
@@ -65,9 +77,14 @@ def save_checkpoint(directory: str | Path, step: int, state: Any,
     if pspecs is not None:
         flat_p, _ = _flatten_with_paths(pspecs)
         manifest["pspecs"] = {k: str(v) for k, v in flat_p}
+    if extra is not None:
+        manifest["extra"] = extra
+    fault_point("checkpoint.write")
     np.savez(tmp / "arrays.npz", **arrays)
     (tmp / "manifest.json").write_text(json.dumps(manifest))
+    fault_point("checkpoint.commit")             # crash: tmp left behind
     os.replace(tmp, final)                       # atomic publish
+    fault_point("checkpoint.retention")          # crash: publish stands
 
     # retention (never deletes the one just written)
     steps = sorted(all_steps(directory))
@@ -136,6 +153,34 @@ def restore_checkpoint(directory: str | Path, like: Any,
             leaves.append(jax.numpy.asarray(arr))
     state = jax.tree.unflatten(treedef, leaves)
     return state, step
+
+
+def read_manifest(directory: str | Path,
+                  step: Optional[int] = None) -> dict:
+    """Manifest of one checkpoint (latest by default)."""
+    directory = Path(directory)
+    step = step if step is not None else latest_step(directory)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints in {directory}")
+    d = directory / f"step_{step:08d}"
+    return json.loads((d / "manifest.json").read_text())
+
+
+def load_checkpoint(directory: str | Path,
+                    step: Optional[int] = None) -> tuple[dict, dict]:
+    """Raw load without a ``like`` structure: returns
+    (manifest, {leaf key -> numpy array}). The resilience layer uses
+    this because its snapshot layout is keyed by relation name, not by
+    a fixed pytree the caller must reconstruct first."""
+    directory = Path(directory)
+    step = step if step is not None else latest_step(directory)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints in {directory}")
+    d = directory / f"step_{step:08d}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    arrays = np.load(d / "arrays.npz")
+    out = {l["key"]: arrays[l["name"]] for l in manifest["leaves"]}
+    return manifest, out
 
 
 class CheckpointManager:

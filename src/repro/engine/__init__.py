@@ -6,6 +6,9 @@ from repro.engine.backend import (
     JNP, JnpDispatch, KernelDispatch, PallasDispatch, resolve_backend,
 )
 from repro.engine.engine import Engine, EngineConfig, EngineStats
+from repro.engine.faults import (
+    FaultError, FaultPlan, FaultSpec, SimulatedCrash,
+)
 from repro.engine.observe import (
     REGISTRY, MetricsRegistry, Observation, validate_chrome_trace,
 )
@@ -30,11 +33,25 @@ def make_engine(compiled, config: EngineConfig | None = None,
     return Engine(compiled, config)
 
 
+def __getattr__(name):
+    # the resilience layer imports checkpoint/ (and through it jax
+    # tree flattening); load it lazily so `import repro.engine` stays
+    # checkpoint-free
+    if name in ("DurableIncrementalEngine", "ResilienceConfig",
+                "SnapshotMismatch", "UpdateLog"):
+        from repro.engine import resilience
+        return getattr(resilience, name)
+    raise AttributeError(name)
+
+
 __all__ = [
     "PRESENCE", "COUNTING", "MIN_MONOID", "MAX_MONOID", "Semiring",
     "Relation", "from_numpy", "to_numpy",
     "JNP", "JnpDispatch", "KernelDispatch", "PallasDispatch",
     "resolve_backend",
     "Engine", "EngineConfig", "EngineStats", "make_engine",
+    "FaultError", "FaultPlan", "FaultSpec", "SimulatedCrash",
     "REGISTRY", "MetricsRegistry", "Observation", "validate_chrome_trace",
+    "DurableIncrementalEngine", "ResilienceConfig", "SnapshotMismatch",
+    "UpdateLog",
 ]

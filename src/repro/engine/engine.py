@@ -27,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import ir as I
+from repro.engine import faults as F
 from repro.engine import observe as O
 from repro.engine import relops as R
 from repro.engine.backend import KernelDispatch, resolve_backend
@@ -74,8 +75,11 @@ class EngineConfig:
     # every stored relation to the host at each stratum boundary (and
     # after incremental apply) and validate the relation.py arrangement
     # contract — sort-order witnesses vs actual data, PAD tails,
-    # distinctness, shard homing. Debug-only: O(rows) host transfers.
-    check_invariants: bool = False
+    # distinctness, shard homing. False disables; True checks every
+    # boundary (O(rows) host transfers — debug only); an int N >= 2
+    # samples every Nth boundary, cheap enough to leave on in the
+    # durable serving path (engine/resilience.py).
+    check_invariants: "bool | int" = False
     # observability (engine/observe.py): attach an ``Observation`` to
     # record the span tree of every run/apply (strata, iterations, rule
     # passes, memo-jit and grow events) plus run-scoped metrics. None
@@ -92,6 +96,9 @@ class EngineStats:
     wall_s: float = 0.0
     grow_retries: int = 0
     total_facts: dict = field(default_factory=dict)
+    # the capacities the run actually completed at (== the config caps
+    # unless auto-grow retried; see Engine.effective_caps)
+    effective_caps: dict = field(default_factory=dict)
 
     @property
     def total_iterations(self) -> int:
@@ -121,6 +128,17 @@ class Engine:
         # structural key -> last full (capacity-qualified) key, to spot
         # auto-grow retraces for the observability layer
         self._jit_base_seen: dict = {}
+        # effective capacities: attempt-local growth state. run()'s
+        # auto-grow doubles THESE (and restores the entry caps on
+        # success/failure) — cfg is never mutated, so grown capacity no
+        # longer leaks into every later run and memo-jit key. The
+        # resilience layer (engine/resilience.py) owns persistent cap
+        # changes via set_caps.
+        self._intermediate_cap = int(self.cfg.intermediate_cap)
+        self._idb_cap_default = int(self.cfg.idb_cap)
+        self._idb_caps = dict(self.cfg.idb_caps)
+        # stratum-boundary counter for the sanitizer's sampling mode
+        self._sanitize_count = 0
 
     def _memo_jit(self, key: tuple, make):
         """Memoize a jitted stratum function across run()/apply() calls.
@@ -141,8 +159,8 @@ class Engine:
             return make()
         obs = self.cfg.observe
         base = key
-        key = key + (self.cfg.intermediate_cap, self.cfg.idb_cap,
-                     tuple(sorted(self.cfg.idb_caps.items())))
+        key = key + (self._intermediate_cap, self._idb_cap_default,
+                     tuple(sorted(self._idb_caps.items())))
         fn = self._jit_memo.get(key)
         if fn is None:
             if obs is not None:
@@ -156,9 +174,51 @@ class Engine:
             O.count(obs, "memo_jit.hit")
         return fn
 
-    # -- helpers -------------------------------------------------------------
+    # -- effective capacities -------------------------------------------------
+    @property
+    def intermediate_cap(self) -> int:
+        return self._intermediate_cap
+
     def _idb_cap(self, name: str) -> int:
-        return int(self.cfg.idb_caps.get(name, self.cfg.idb_cap))
+        return int(self._idb_caps.get(name, self._idb_cap_default))
+
+    def effective_caps(self) -> dict:
+        """Snapshot of the capacities the engine currently executes at
+        (== config caps unless grown by run()'s retry or set_caps)."""
+        return {"intermediate_cap": self._intermediate_cap,
+                "idb_cap": self._idb_cap_default,
+                "idb_caps": dict(self._idb_caps)}
+
+    def set_caps(self, caps: dict) -> None:
+        """Install effective capacities (the resilience layer's entry
+        point for persistent capacity changes; run() uses it to restore
+        its entry caps after an auto-grow attempt)."""
+        self._intermediate_cap = int(
+            caps.get("intermediate_cap", self._intermediate_cap))
+        self._idb_cap_default = int(
+            caps.get("idb_cap", self._idb_cap_default))
+        if "idb_caps" in caps:
+            self._idb_caps = {k: int(v)
+                              for k, v in caps["idb_caps"].items()}
+
+    def grow_caps(self, factor: int = 2) -> dict:
+        """Multiply every effective capacity; returns the new caps."""
+        self._intermediate_cap *= factor
+        self._idb_cap_default *= factor
+        self._idb_caps = {k: v * factor for k, v in self._idb_caps.items()}
+        return self.effective_caps()
+
+    def _overflow_msg(self, what: str, context: str = "") -> str:
+        caps = self.effective_caps()
+        ctx = f" [{context}]" if context else ""
+        msg = (f"overflow in {what}{ctx}: "
+               f"intermediate_cap={caps['intermediate_cap']} "
+               f"idb_cap={caps['idb_cap']}")
+        if caps["idb_caps"]:
+            msg += f" idb_caps={caps['idb_caps']}"
+        return msg
+
+    # -- helpers -------------------------------------------------------------
 
     def _sr_of(self, name: str) -> Semiring:
         if name in self.monoid:
@@ -387,11 +447,11 @@ class Engine:
     # -- maintenance driver hooks (single-device; ShardedEngine overrides) ----
     def _maintenance_evaluator(self) -> Evaluator:
         return Evaluator(LowerConfig(
-            self.cfg.intermediate_cap, self.cfg.semiring, self.backend,
+            self.intermediate_cap, self.cfg.semiring, self.backend,
             self.cfg.arrangements))
 
     def run_rule_pass(self, env_rels, roots, restrict=None,
-                      memo_key=None) -> dict:
+                      memo_key=None, context: str = "") -> dict:
         """Driver entry for an incremental maintenance pass: ``roots``
         is a list of (head, retagged IR) pairs; ``env_rels`` maps
         (name, version) to stored relations (including any
@@ -404,7 +464,12 @@ class Engine:
         heads — the callers derive it from the stratum index and the
         changed-relation names); when given, the traced pass is
         memo-jitted so a stream of updates touching the same relations
-        re-executes one compiled pass instead of re-tracing."""
+        re-executes one compiled pass instead of re-tracing.
+
+        ``context`` (stratum key + pass name from the caller) is folded
+        into the overflow message alongside the current capacities so a
+        maintenance overflow is traceable."""
+        F.fault_point("engine.rule_pass")
         restrict = restrict or {}
         ev = self._maintenance_evaluator()
 
@@ -418,7 +483,8 @@ class Engine:
                                 lambda: pass_fn)
             derived, ovf = fn(dict(env_rels), restrict)
         if bool(np.asarray(ovf).any()):
-            raise OverflowError_("overflow in incremental rule pass")
+            raise OverflowError_(
+                self._overflow_msg("incremental rule pass", context))
         return derived
 
     def _stored(self, rels: dict) -> dict:
@@ -434,21 +500,35 @@ class Engine:
         out, _ = R.difference(rel, sub, backend=self.backend)
         return out
 
-    def _union_stored(self, rels: list, sr: Semiring, cap: int):
+    def _union_stored(self, rels: list, sr: Semiring, cap: int,
+                      context: str = ""):
         """Stored-form union (combining maintenance seed sets)."""
         out, ov = R.concat_all(rels, sr, cap, backend=self.backend)
         if bool(np.asarray(ov).any()):
-            raise OverflowError_("overflow combining maintenance seeds")
+            raise OverflowError_(self._overflow_msg(
+                "maintenance seed union", context))
         return out
 
     # -- runtime invariant sanitizer (core/analysis/sanitize.py) ---------------
     _sanitize_layer = "engine"
 
+    def _sanitize_due(self) -> bool:
+        """cfg.check_invariants gate: False disables, True checks every
+        stratum boundary, an int N >= 2 samples every Nth boundary
+        (the counter spans runs AND incremental applies, so a serving
+        loop amortizes the O(rows) host transfers across updates)."""
+        ci = self.cfg.check_invariants
+        if not ci:
+            return False
+        self._sanitize_count += 1
+        n = 1 if ci is True else int(ci)
+        return n <= 1 or self._sanitize_count % n == 0
+
     def _sanitize_env(self, env, where: str) -> None:
         """Validate every stored arrangement against device data when
         cfg.check_invariants is set (lazy import: sanitize is layered
         above the engine)."""
-        if not self.cfg.check_invariants:
+        if not self._sanitize_due():
             return
         from repro.core.analysis.sanitize import sanitize_env
         sanitize_env(self, env, where, self._sanitize_layer)
@@ -464,10 +544,11 @@ class Engine:
 
     def _run_stratum_body(self, sp: I.StratumPlan, env_rels, stats,
                           stratum_key, init_state=None, st_span=None):
+        F.fault_point("engine.stratum")
         base_env_rels = env_rels
         obs = self.cfg.observe
         cfg = self.cfg
-        lcfg = LowerConfig(cfg.intermediate_cap, cfg.semiring,
+        lcfg = LowerConfig(self.intermediate_cap, cfg.semiring,
                            self.backend, cfg.arrangements)
         ev = Evaluator(lcfg)
         monoid_names = set(self.monoid)
@@ -602,29 +683,39 @@ class Engine:
     def run(self, edbs: dict[str, np.ndarray],
             edb_caps: Optional[dict] = None) -> tuple[dict, EngineStats]:
         """Evaluate the program. Returns ({relation: np.ndarray}, stats).
-        Monoid IDBs come back with the value re-attached as a column."""
+        Monoid IDBs come back with the value re-attached as a column.
+
+        Capacity-overflow retries grow the *effective* caps (attempt-
+        local state; cfg is never mutated) and restore the entry caps
+        when run() returns — the capacities the run completed at are
+        recorded in ``stats.effective_caps``. Persistent growth is the
+        resilience layer's decision (engine/resilience.py adopts
+        ``stats.effective_caps`` via ``set_caps`` when it wants the
+        grown capacity to stick)."""
+        entry_caps = self.effective_caps()
         attempt = 0
-        while True:
-            try:
-                out, stats = self._run_once(edbs, edb_caps)
-                stats.grow_retries = attempt
-                return out, stats
-            except OverflowError_:
-                attempt += 1
-                if not self.cfg.auto_grow or (
-                        attempt > self.cfg.max_grow_retries):
-                    raise
-                self.cfg.intermediate_cap *= 2
-                self.cfg.idb_cap *= 2
-                self.cfg.idb_caps = {
-                    k: v * 2 for k, v in self.cfg.idb_caps.items()}
-                obs = self.cfg.observe
-                if obs is not None:
-                    obs.registry.inc("engine.grow_retries")
-                    obs.event(
-                        "grow-retry", attempt=attempt,
-                        intermediate_cap=self.cfg.intermediate_cap,
-                        idb_cap=self.cfg.idb_cap)
+        try:
+            while True:
+                try:
+                    out, stats = self._run_once(edbs, edb_caps)
+                    stats.grow_retries = attempt
+                    stats.effective_caps = self.effective_caps()
+                    return out, stats
+                except OverflowError_:
+                    attempt += 1
+                    if not self.cfg.auto_grow or (
+                            attempt > self.cfg.max_grow_retries):
+                        raise
+                    grown = self.grow_caps()
+                    obs = self.cfg.observe
+                    if obs is not None:
+                        obs.registry.inc("engine.grow_retries")
+                        obs.event(
+                            "grow-retry", attempt=attempt,
+                            intermediate_cap=grown["intermediate_cap"],
+                            idb_cap=grown["idb_cap"])
+        finally:
+            self.set_caps(entry_caps)
 
     def _edb_env(self, edbs, edb_caps) -> dict:
         """Host EDB arrays -> (name, FULL) Relation environment."""
@@ -664,6 +755,7 @@ class Engine:
         return out
 
     def _run_once(self, edbs, edb_caps):
+        F.fault_point("engine.run")
         t0 = time.perf_counter()
         stats = EngineStats()
         with O.span(self.cfg.observe, "run",

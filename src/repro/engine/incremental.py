@@ -77,6 +77,7 @@ import numpy as np
 
 from repro.core import ir as I
 from repro.engine import make_engine
+from repro.engine import faults as F
 from repro.engine import observe as O
 from repro.engine.engine import EngineConfig, EngineStats
 from repro.engine.relation import (
@@ -213,6 +214,11 @@ class IncrementalEngine:
     def initialize(self, edbs: dict[str, np.ndarray]) -> dict[str, np.ndarray]:
         self.edbs = {k: set(_row_tuples(v)) for k, v in edbs.items()}
         out, stats = self.engine.run(edbs)
+        if stats.grow_retries:
+            # run() restores its entry caps on return, but the stored
+            # fulls were materialized at the grown caps — keep
+            # maintenance executing at the caps that worked
+            self.engine.set_caps(stats.effective_caps)
         self._env = self.engine.last_env
         self._stats = stats
         return out
@@ -220,6 +226,7 @@ class IncrementalEngine:
     def apply(self, inserts: Optional[dict[str, np.ndarray]] = None,
               deletes: Optional[dict[str, np.ndarray]] = None
               ) -> dict[str, np.ndarray]:
+        F.fault_point("incremental.apply")
         inserts = inserts or {}
         deletes = deletes or {}
         changed = set(inserts) | set(deletes)
@@ -261,11 +268,7 @@ class IncrementalEngine:
             # refresh EDB relations in env (stored form: the sharded
             # driver scatters each to its home shards)
             for name in changed:
-                rows = np.array(sorted(self.edbs[name])) if (
-                    self.edbs[name]) else (
-                    np.zeros((0, max(self.compiled.arities[name], 1))))
-                self._env[(name, I.FULL)] = self.engine._stored(
-                    {name: from_numpy(rows, pow2_cap(len(rows)))})[name]
+                self._refresh_edb(name)
 
             # change sets grow as strata update (IDB-level diffs feed
             # downstream)
@@ -311,6 +314,7 @@ class IncrementalEngine:
                     strategy = "seed-insert"
                 with O.span(obs, "maintain-stratum",
                             key=f"s{sp.index}", strategy=strategy):
+                    F.fault_point("incremental.maintain")
                     O.count(obs, f"incremental.{strategy}")
                     if strategy == "recompute":
                         self._recompute_stratum(sp)
@@ -334,7 +338,7 @@ class IncrementalEngine:
             # batch run would leave behind (core/analysis/sanitize.py);
             # the recompute/fixpoint paths were checked per-stratum
             # already — this covers the seed-merge and DRed update paths
-            if self.engine.cfg.check_invariants:
+            if self.engine._sanitize_due():
                 from repro.core.analysis.sanitize import sanitize_env
                 sanitize_env(self.engine, self._env, "incremental apply",
                              "incremental")
@@ -378,6 +382,80 @@ class IncrementalEngine:
         return self.engine._stored(
             {name: self._rel_from_rows(name, rows)
              for name, rows in rows_by_name.items()})
+
+    def _edb_rows(self, name: str) -> np.ndarray:
+        """Current mirror rows for one EDB (sorted; empty-safe)."""
+        rows = self.edbs.get(name, set())
+        if rows:
+            return np.array(sorted(rows))
+        return np.zeros((0, max(self.compiled.arities[name], 1)))
+
+    def _refresh_edb(self, name: str) -> None:
+        """Mirror -> stored EDB relation in the env (the sharded driver
+        scatters to home shards)."""
+        rows = self._edb_rows(name)
+        self._env[(name, I.FULL)] = self.engine._stored(
+            {name: from_numpy(rows, pow2_cap(len(rows)))})[name]
+
+    # -- recompute rungs (engine/resilience.py degradation ladder) -------------
+    def apply_base(self, inserts: Optional[dict] = None,
+                   deletes: Optional[dict] = None) -> set:
+        """Apply an update batch to the base EDB state only — the host
+        multiset mirror plus the stored EDB relations — WITHOUT
+        maintaining any IDB. Returns the set of EDB names actually
+        changed. Idempotent: re-applying rows already present (or
+        deleting rows already absent) is a no-op, so the resilience
+        ladder can re-base after a partially-failed maintenance pass
+        and recompute from a consistent EDB state."""
+        inserts = inserts or {}
+        deletes = deletes or {}
+        for name in set(inserts) | set(deletes):
+            if name not in self.compiled.edbs:
+                raise ValueError(f"{name} is not an EDB")
+        changed: set[str] = set()
+        for name, rows in inserts.items():
+            new = [r for r in _row_tuples(rows)
+                   if r not in self.edbs.setdefault(name, set())]
+            if new:
+                self.edbs[name] |= set(new)
+                changed.add(name)
+        for name, rows in deletes.items():
+            old = [r for r in _row_tuples(rows)
+                   if r in self.edbs.get(name, set())]
+            if old:
+                self.edbs[name] -= set(old)
+                changed.add(name)
+        for name in changed:
+            self._refresh_edb(name)
+        return changed
+
+    def recompute_strata(self, changed: Optional[set] = None) -> None:
+        """Recompute strata from the current EDB state through the
+        driver (``_run_stratum`` — sharded engines recompute
+        shard-local): every stratum when ``changed`` is None, else the
+        dependency closure downstream of the changed relations, in
+        stratum order so each recomputed IDB feeds later strata."""
+        if changed is None:
+            affected = {sp.index for sp in self.compiled.strata}
+        else:
+            affected = set()
+            for name in changed:
+                affected |= self._downstream.get(name, set())
+        for sp in self.compiled.strata:
+            if sp.index in affected:
+                self._recompute_stratum(sp)
+
+    def reinitialize(self) -> dict[str, np.ndarray]:
+        """Full batch recompute from the current EDB mirror (the last
+        resilience rung): re-runs the whole program and replaces the
+        maintained state wholesale."""
+        edbs = {name: self._edb_rows(name) for name in self.edbs}
+        out, stats = self.engine.run(edbs)
+        if stats.grow_retries:
+            self.engine.set_caps(stats.effective_caps)
+        self._env = self.engine.last_env
+        self._stats = stats
+        return out
 
     def snapshot(self) -> dict[str, np.ndarray]:
         out = {}
@@ -435,7 +513,9 @@ class IncrementalEngine:
                     stratum=f"s{sp.index}",
                     changed=",".join(sorted(changed_rows))):
             return self.engine.run_rule_pass(
-                rels, roots, restrict=restrict, memo_key=memo_key)
+                rels, roots, restrict=restrict, memo_key=memo_key,
+                context=(f"stratum=s{sp.index} pass=seed "
+                         f"changed={','.join(sorted(changed_rows))}"))
 
     def _insert_stratum(self, sp: I.StratumPlan,
                         inserts: dict[str, np.ndarray]) -> None:
@@ -511,7 +591,8 @@ class IncrementalEngine:
             rederive = self.engine.run_rule_pass(
                 dict(self._env), plain_roots, restrict=candidates_rel,
                 memo_key=(sp.index, "rederive",
-                          tuple(sorted(candidates_rel))))
+                          tuple(sorted(candidates_rel))),
+                context=f"stratum=s{sp.index} pass=dred-rederive")
         # 4. insertions seeded on the post-deletion state
         if inserts:
             ins_rel = self._stored_from_rows(inserts)
@@ -520,7 +601,9 @@ class IncrementalEngine:
                 if head in rederive:
                     rederive[head] = self.engine._union_stored(
                         [rederive[head], rel], self.engine._sr_of(head),
-                        self.engine._idb_cap(head))
+                        self.engine._idb_cap(head),
+                        context=(f"stratum=s{sp.index} "
+                                 f"pass=dred-insert-union head={head}"))
                 else:
                     rederive[head] = rel
         self._continue_fixpoint(sp, rederive)

@@ -76,6 +76,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec
 
 from repro.core import ir as I
+from repro.engine import faults as F
 from repro.engine import observe as O
 from repro.engine import relops as R
 from repro.engine.engine import (
@@ -390,9 +391,10 @@ class ShardedEngine(Engine):
     # body for both drivers)
     def _run_stratum_body(self, sp: I.StratumPlan, env_rels, stats,
                           stratum_key, init_state=None, st_span=None):
+        F.fault_point("engine.stratum")
         obs = self.cfg.observe
         cfg = self.cfg
-        lcfg = LowerConfig(cfg.intermediate_cap, cfg.semiring,
+        lcfg = LowerConfig(self.intermediate_cap, cfg.semiring,
                            self.backend, cfg.arrangements)
         ev = ShardedEvaluator(lcfg, self.num_shards)
         monoid_names = set(self.monoid)
@@ -572,12 +574,12 @@ class ShardedEngine(Engine):
     # -- maintenance driver hooks (incremental.py runs through these) ---------
     def _maintenance_evaluator(self):
         return ShardedEvaluator(
-            LowerConfig(self.cfg.intermediate_cap, self.cfg.semiring,
+            LowerConfig(self.intermediate_cap, self.cfg.semiring,
                         self.backend, self.cfg.arrangements),
             self.num_shards)
 
     def run_rule_pass(self, env_rels, roots, restrict=None,
-                      memo_key=None) -> dict:
+                      memo_key=None, context: str = "") -> dict:
         """Sharded maintenance pass: the shared ``_rule_pass_body``
         runs inside shard_map with the key-partitioned evaluator, so
         every retagged rule occurrence repartitions its operands on the
@@ -585,7 +587,10 @@ class ShardedEngine(Engine):
         ``_merge_head`` re-homes derived rows before the per-head
         union. Inputs must already be in stored (sharded) form — see
         ``_stored``. ``memo_key`` (structure of the pass) enables the
-        same cross-update trace reuse as the single-device driver."""
+        same cross-update trace reuse as the single-device driver.
+        The fault site shares the single-device driver's name, so one
+        fault plan is portable across shard counts."""
+        F.fault_point("engine.rule_pass")
         ev = self._maintenance_evaluator()
         restrict = dict(restrict or {})
 
@@ -601,7 +606,8 @@ class ShardedEngine(Engine):
                                   lambda: self._shmap(pass_fn, jit=False))
         derived, ovf = step(dict(env_rels), restrict)
         if bool(np.asarray(ovf).any()):
-            raise OverflowError_("overflow in incremental rule pass")
+            raise OverflowError_(
+                self._overflow_msg("incremental rule pass", context))
         return derived
 
     def _stored(self, rels: dict) -> dict:
@@ -631,7 +637,8 @@ class ShardedEngine(Engine):
 
         return self._shmap(diff_fn)((rel, sub))
 
-    def _union_stored(self, rels: list, sr: Semiring, cap: int):
+    def _union_stored(self, rels: list, sr: Semiring, cap: int,
+                      context: str = ""):
         """Shard-local union of home-partitioned relations (duplicates
         co-locate, so concat + dedupe needs no communication)."""
         def union_fn(rels_g):
@@ -641,5 +648,6 @@ class ShardedEngine(Engine):
 
         out, ov = self._shmap(union_fn)(list(rels))
         if bool(np.asarray(ov).any()):
-            raise OverflowError_("overflow combining maintenance seeds")
+            raise OverflowError_(self._overflow_msg(
+                "maintenance seed union", context))
         return out

@@ -444,6 +444,32 @@ def test_incremental_apply_sanitized():
     assert "tc" in snap
 
 
+def test_sanitizer_sampling_every_nth(monkeypatch):
+    """check_invariants=N runs the sanitizer at every Nth stratum
+    boundary only (True = every boundary, False = never); the counter
+    persists across calls so a serving loop amortizes the O(rows)
+    host transfers. N=1 degenerates to True (guards the
+    isinstance(True, int) trap: True must mean 1, not 'sample')."""
+    import repro.core.analysis.sanitize as S
+    calls = []
+    monkeypatch.setattr(
+        S, "sanitize_env", lambda *a, **k: calls.append(1))
+    env = {("tc", I.FULL): _rel([[1, 2]])}
+
+    def boundaries(ci, n=9):
+        del calls[:]
+        eng = Engine(_compiled(), EngineConfig(check_invariants=ci))
+        for _ in range(n):
+            eng._sanitize_env(env, "boundary")
+        return len(calls)
+
+    assert boundaries(False) == 0
+    assert boundaries(True) == 9
+    assert boundaries(1) == 9
+    assert boundaries(3) == 3
+    assert boundaries(4) == 2
+
+
 # -- counter scoping (satellite) ----------------------------------------------
 
 def test_counter_scope_isolates_and_accumulates():

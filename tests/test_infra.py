@@ -81,6 +81,80 @@ def test_elastic_restore_dtype_cast(tmp_path):
     assert restored["w"].dtype == jnp.bfloat16
 
 
+def test_checkpoint_stale_tmp_cleaned_on_next_save(tmp_path):
+    """A .tmp left by a crash mid-write is ignored by latest_step and
+    removed by the next save (which still publishes normally)."""
+    st = _state()
+    crash = tmp_path / "step_00000009.tmp"
+    crash.mkdir(parents=True)
+    (crash / "arrays.npz").write_bytes(b"garbage")
+    assert latest_step(tmp_path) is None
+    save_checkpoint(tmp_path, 10, st)
+    assert latest_step(tmp_path) == 10
+    assert not list(tmp_path.glob("*.tmp"))
+
+
+def test_checkpoint_crash_at_commit_then_recover(tmp_path):
+    """Simulated crash between array write and the atomic publish:
+    the interrupted step is invisible, the previous step stays the
+    newest valid checkpoint, and a re-save completes cleanly."""
+    from repro.engine import faults as F
+    st = _state()
+    save_checkpoint(tmp_path, 1, st)
+    plan = F.FaultPlan([F.FaultSpec("checkpoint.commit", kind="crash")])
+    with F.install(plan):
+        try:
+            save_checkpoint(tmp_path, 2, st)
+            raise AssertionError("expected injected crash")
+        except F.SimulatedCrash:
+            pass
+    assert (tmp_path / "step_00000002.tmp").exists()
+    assert latest_step(tmp_path) == 1
+    save_checkpoint(tmp_path, 2, st)         # next save cleans + lands
+    assert latest_step(tmp_path) == 2
+    assert not list(tmp_path.glob("*.tmp"))
+
+
+def test_checkpoint_bf16_roundtrip(tmp_path):
+    """bf16 leaves survive the npz float32 detour bit-exactly (bf16 is
+    a strict truncation of float32) and come back as bf16."""
+    vals = jnp.asarray(
+        np.linspace(-3.0, 3.0, 16, dtype=np.float32),
+        jnp.bfloat16).reshape(4, 4)
+    save_checkpoint(tmp_path, 1, {"w": vals})
+    like = {"w": jax.ShapeDtypeStruct((4, 4), jnp.bfloat16)}
+    restored, _ = restore_checkpoint(tmp_path, like)
+    assert restored["w"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(vals, np.float32),
+                                  np.asarray(restored["w"], np.float32))
+
+
+def test_checkpoint_retention_never_deletes_newest(tmp_path):
+    """keep=1 leaves exactly the newest valid checkpoint, even with a
+    crash .tmp dir sitting next to it."""
+    st = _state()
+    for s in [1, 2, 3]:
+        save_checkpoint(tmp_path, s, st, keep=1)
+    (tmp_path / "step_00000099.tmp").mkdir()
+    save_checkpoint(tmp_path, 4, st, keep=1)
+    assert all_steps(tmp_path) == [4]
+    restored, step = restore_checkpoint(
+        tmp_path, jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), st))
+    assert step == 4
+
+
+def test_checkpoint_extra_manifest_roundtrip(tmp_path):
+    """The resilience layer's compatibility record rides the manifest."""
+    from repro.checkpoint.checkpoint import load_checkpoint, read_manifest
+    extra = {"program": "abc123", "applied_seq": 7}
+    save_checkpoint(tmp_path, 7, {"x": np.arange(3)}, extra=extra)
+    assert read_manifest(tmp_path)["extra"] == extra
+    manifest, arrays = load_checkpoint(tmp_path)
+    assert manifest["extra"] == extra
+    np.testing.assert_array_equal(list(arrays.values())[0], np.arange(3))
+
+
 def test_int8_quantization_error_bound(rng):
     x = jnp.asarray(rng.normal(size=(128,)) * 3, jnp.float32)
     q, s = quantize_int8(x)

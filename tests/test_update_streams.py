@@ -292,6 +292,145 @@ def _run_sharded_stream(program: str, shards: int, backend: str = "jnp",
     _assert_states_equal(b, batch, ctx0 + " step=final-vs-batch")
 
 
+# -- crash-replay differential (engine/resilience.py) ------------------------
+#
+# Property: a durable engine driven through the SAME stream while a
+# seeded fault plan injects crashes at random fault sites — each crash
+# followed by a cold restart (recover = snapshot restore + log replay,
+# then client re-submission of the in-flight batch) — must be
+# byte-identical to the uninterrupted run after every step: same
+# snapshots AND same maintenance iteration counts.
+
+CRASH_SITES = (
+    "resilience.after_log",    # logged but not applied
+    "wal.before_append",       # batch never became durable
+    "incremental.apply",       # died entering maintenance
+    "incremental.maintain",    # died mid-apply, partial in-memory state
+    "checkpoint.commit",       # died mid-snapshot (tmp left behind)
+    "checkpoint.retention",    # snapshot published, cleanup lost
+)
+
+
+def _reference_trail(program: str, backend: str, edbs: dict,
+                     steps: list) -> tuple[list, list]:
+    """Per-step snapshots + iteration dicts of the uninterrupted run
+    (no fault plan active: the reference must never see a fault)."""
+    ref = _inc(program, backend)
+    outs = [ref.initialize({k: v.copy() for k, v in edbs.items()})]
+    iters = [dict(ref._stats.iterations)]
+    for ins, dele in steps:
+        outs.append(ref.apply(
+            inserts={k: v.copy() for k, v in ins.items()},
+            deletes={k: v.copy() for k, v in dele.items()}))
+        iters.append(dict(ref._stats.iterations))
+    return outs, iters
+
+
+def _run_crash_replay_stream(program: str = "TC", backend: str = "jnp",
+                             shards: int = 0, n_steps: int = 8,
+                             seed: int = 31, n_crashes: int = 4,
+                             state_dir=None, plan=None) -> int:
+    """Drive one crash-replay differential stream; returns the number
+    of crashes absorbed. ``plan`` overrides the seeded random plan with
+    an explicit fault schedule (the named-site tests use this)."""
+    import tempfile
+
+    from repro.engine import faults
+    from repro.engine.faults import FaultPlan, SimulatedCrash
+    from repro.engine.resilience import (
+        DurableIncrementalEngine, ResilienceConfig,
+    )
+
+    if shards:
+        _need(shards)
+    edbs = _edbs(program)
+    steps = gen_stream(seed, edbs, n_steps)
+    ref_outs, ref_iters = _reference_trail(program, backend, edbs, steps)
+
+    cp = compile_program(_source(program))
+    rcfg = ResilienceConfig(snapshot_every=3)
+    if plan is None:
+        plan = FaultPlan.seeded(seed, CRASH_SITES, n_faults=n_crashes,
+                                max_hit=max(2, n_steps))
+    tmp_ctx = (tempfile.TemporaryDirectory() if state_dir is None
+               else None)
+    d = tmp_ctx.name if tmp_ctx else state_dir
+    crashes = 0
+    box = {}
+
+    def fresh():
+        return DurableIncrementalEngine(
+            cp, _cfg(kernel_backend=backend, shards=shards),
+            directory=d, resilience=rcfg)
+
+    def restart():
+        nonlocal crashes
+        while True:                 # recovery itself may crash again
+            try:
+                box["dur"].close()
+                box["dur"] = fresh()
+                if box["dur"].recoverable():
+                    box["dur"].recover()
+                else:               # died before snapshot 0 landed
+                    box["dur"].initialize(
+                        {k: v.copy() for k, v in edbs.items()})
+                return
+            except SimulatedCrash:
+                crashes += 1
+
+    def until_done(op):
+        nonlocal crashes
+        while True:
+            try:
+                return op()
+            except SimulatedCrash:
+                crashes += 1
+                restart()           # then re-submit the in-flight op
+
+    try:
+        box["dur"] = fresh()
+        with faults.install(plan):
+            until_done(lambda: box["dur"].initialize(
+                {k: v.copy() for k, v in edbs.items()}))
+            for i, (ins, dele) in enumerate(steps):
+                out = until_done(lambda: box["dur"].apply(
+                    inserts={k: v.copy() for k, v in ins.items()},
+                    deletes={k: v.copy() for k, v in dele.items()}))
+                ctx = (f"crash-replay program={program} "
+                       f"backend={backend} shards={shards} seed={seed} "
+                       f"step={i} fired={plan.fired}")
+                _assert_states_equal(out, ref_outs[i + 1], ctx)
+                assert (box["dur"].inc._stats.iterations
+                        == ref_iters[i + 1]), (
+                    f"iteration-count divergence: {ctx}: "
+                    f"{box['dur'].inc._stats.iterations} != "
+                    f"{ref_iters[i + 1]}")
+        # clean cold restart after the stream: recovered state must
+        # still equal the uninterrupted final state
+        box["dur"].close()
+        cold = fresh()
+        final = cold.recover()
+        _assert_states_equal(
+            final, ref_outs[-1],
+            f"crash-replay cold-restart program={program} "
+            f"backend={backend} shards={shards} seed={seed}")
+        assert cold.inc._stats.iterations == ref_iters[-1]
+        cold.close()
+    finally:
+        if tmp_ctx:
+            tmp_ctx.cleanup()
+    return crashes
+
+
+def test_crash_replay_matches_uninterrupted(tmp_path):
+    """Seeded random crashes at every fault-site class: restore +
+    replay is byte-identical (facts + iteration counts) to the
+    uninterrupted run, after every step and after a cold restart."""
+    crashes = _run_crash_replay_stream(
+        "TC", n_steps=8, seed=31, state_dir=tmp_path)
+    assert crashes >= 1, "fault plan must actually crash the stream"
+
+
 @pytest.mark.parametrize("shards", (1, 2, 4, 8))
 def test_sharded_update_stream(shards):
     """Seeded continuations and DRed deletions execute shard-local:
